@@ -1,0 +1,45 @@
+"""Fig 9 — average number of independent failure clusters vs number of
+failures, CORE matrix (14,12,5), random failure placement."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.failure_matrix import num_clusters, random_failure_matrix
+
+
+def run(fast: bool = True) -> list[dict]:
+    samples = 2000 if fast else 10_000_000 // 20
+    rng = np.random.default_rng(0)
+    rows = []
+    for nf in range(1, 21):
+        tot = 0
+        for i in range(samples):
+            fm = random_failure_matrix(6, 14, nf, rng)
+            tot += num_clusters(fm)
+        rows.append(
+            {"bench": "fig9_clusters", "failures": nf,
+             "mean_clusters": round(tot / samples, 3)}
+        )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    msgs = []
+    # single failure -> exactly 1 cluster; clusters peak then merge back down
+    one = next(r for r in rows if r["failures"] == 1)
+    peak = max(r["mean_clusters"] for r in rows)
+    last = rows[-1]["mean_clusters"]
+    ok = one["mean_clusters"] == 1.0 and peak > 2.0 and last < peak
+    msgs.append(
+        f"fig9: clusters(1)={one['mean_clusters']}, peak={peak:.2f}, "
+        f"clusters(20)={last:.2f} (rise-then-merge shape: {'PASS' if ok else 'FAIL'})"
+    )
+    return msgs
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("\n".join(check(rows)))

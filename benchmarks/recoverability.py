@@ -1,0 +1,62 @@
+"""Fig 10 — recoverability likelihood (in nines) of the (14,12,5) CORE
+matrix vs number of failures, plus the L/U bounds of §6.2."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.failure_matrix import random_failure_matrix
+from repro.core.product_code import CoreCode
+from repro.core.recoverability import (
+    irrecoverability_lower_bound,
+    is_recoverable,
+    recoverability_upper_bound,
+)
+
+
+def run(fast: bool = True) -> list[dict]:
+    code = CoreCode(14, 12, 5)
+    samples = 3000 if fast else 10_000_000 // 20
+    rng = np.random.default_rng(0)
+    L = irrecoverability_lower_bound(code)
+    U = recoverability_upper_bound(code)
+    rows = []
+    for nf in range(1, U + 1):
+        rec = 0
+        for _ in range(samples):
+            fm = random_failure_matrix(code.rows, code.n, nf, rng)
+            rec += is_recoverable(code, fm)
+        pi = rec / samples
+        nines = float("inf") if pi >= 1.0 else -np.log10(1 - pi)
+        rows.append(
+            {"bench": "fig10_recoverability", "failures": nf,
+             "pi": round(pi, 5),
+             "nines": round(nines, 3) if np.isfinite(nines) else "inf",
+             "L": L, "U": U}
+        )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    code = CoreCode(14, 12, 5)
+    L = irrecoverability_lower_bound(code)
+    U = recoverability_upper_bound(code)
+    msgs = [f"fig10: bounds L={L} (paper: 6), U={U} (paper: 20): "
+            f"{'PASS' if (L == 6 and U == 20) else 'FAIL'}"]
+    below_l = [r for r in rows if r["failures"] < L]
+    ok = all(r["pi"] == 1.0 for r in below_l)
+    msgs.append(f"fig10: all patterns below L recoverable: {'PASS' if ok else 'FAIL'}")
+    # paper: L is 'too strict' — recoverability stays high well above L
+    at_8 = next(r for r in rows if r["failures"] == 8)
+    msgs.append(
+        f"fig10: pi(8 failures)={at_8['pi']:.4f} "
+        f"({'PASS' if at_8['pi'] > 0.98 else 'FAIL'} — bound is pessimistic)"
+    )
+    return msgs
+
+
+if __name__ == "__main__":
+    rows = run()
+    for r in rows:
+        print(r)
+    print("\n".join(check(rows)))

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSON records.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        [--dir benchmarks/results/dryrun] [--mesh pod16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(dir_: str, mesh: str) -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            rows.append(r)
+    return rows
+
+
+ACTIONS = {
+    ("compute",): "already MXU-bound: raise per-chip batch or quantize",
+    ("memory", "train"): "fuse attention/scan (flash kernel) to stop spilling scores/states to HBM",
+    ("memory", "decode"): "inherent KV/state streaming: shrink cache dtype (int8 KV) or batch more requests",
+    ("memory", "prefill"): "flash-attention fusion; larger q-chunks to reuse KV",
+    ("collective", "train"): "turn Megatron ARs into RS/AG (sequence-parallel resharding), overlap FSDP gathers",
+    ("collective", "decode"): "shrink flash-combine payload (psum only o/l, group axes), widen batch axes",
+    ("collective", "prefill"): "seq-parallel resharding of activations; ring attention over seq axis",
+}
+
+
+def action_for(r: dict) -> str:
+    key = (r["bottleneck"], r["kind"])
+    return ACTIONS.get(key, ACTIONS.get((r["bottleneck"],), "-"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true", help="markdown table output")
+    args = ap.parse_args()
+
+    rows = load(args.dir, args.mesh)
+    if not rows:
+        print(f"no records for mesh {args.mesh} in {args.dir}")
+        return
+
+    hdr = ("arch", "shape", "kind", "strat", "t_compute", "t_memory",
+           "t_collective", "bound", "useful", "mfu_bound", "hbm/chip")
+    print("| " + " | ".join(hdr) + " |")
+    print("|" + "---|" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        mem_gb = (r["arg_bytes_per_chip"] + r["temp_bytes_per_chip"]) / 2**30
+        print("| {} | {} | {} | {} | {} | {} | {} | **{}** | {:.2f} | {:.3f} | {:.1f}GiB |".format(
+            r["arch"], r["shape"], r["kind"], r.get("strategy", "2d"),
+            fmt_s(r["t_compute"]), fmt_s(r["t_memory"]), fmt_s(r["t_collective"]),
+            r["bottleneck"], r["useful_flops_ratio"], r["mfu_bound"], mem_gb,
+        ))
+    print()
+    print("per-cell dominant-term actions:")
+    for r in sorted(rows, key=lambda r: -max(r["t_compute"], r["t_memory"], r["t_collective"])):
+        t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        print(f"  {r['arch']}.{r['shape']}: {r['bottleneck']} {fmt_s(t)} -> {action_for(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end training driver with CORE-protected fault tolerance.
+
+Trains a small decoder LM (reduced qwen2 wiring; --big trains a ~100M
+variant) on the synthetic pipeline with CORE-encoded checkpoints, then
+demonstrates the paper's value proposition *inside a training job*:
+
+  1. train N steps, checkpointing every K;
+  2. KILL storage nodes (simulated host loss) so checkpoint blocks die;
+  3. DEGRADED RESTORE straight through the failures (vertical XOR path);
+  4. verify the restored train state bit-for-bit (paper §7.3's MD5
+     check, done with sha256 here);
+  5. background-repair the lost blocks (RGS schedule) and keep training.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--big] [--steps 300]
+"""
+
+import argparse
+import hashlib
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.train.loop import LoopConfig, Trainer
+from repro.train import optimizer as opt
+
+
+def state_digest(state) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(jax.tree.map(np.asarray, state)):
+        h.update(np.ascontiguousarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--big", action="store_true",
+                    help="~100M params (slow on CPU; the deliverable profile)")
+    ap.add_argument("--kill-nodes", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2_72b").reduced()
+    if args.big:
+        cfg = cfg.reduced(num_layers=8, d_model=768, num_heads=12, head_dim=64,
+                          d_ff=2048, vocab_size=32768)
+
+    lc = LoopConfig(steps=args.steps, ckpt_every=max(args.steps // 3, 10),
+                    log_every=10, seq_len=128, global_batch=8)
+    oc = opt.OptConfig(lr=1e-3, warmup_steps=10, decay_steps=args.steps)
+    tr = Trainer(cfg, lc, oc)
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(
+        jax.eval_shape(lambda: tr.api.init(cfg, jax.random.PRNGKey(0)))))
+    print(f"arch={cfg.name} (reduced) params={n_params/1e6:.1f}M "
+          f"core_code=({tr.ckpt.code.n},{tr.ckpt.code.k},{tr.ckpt.code.t})")
+
+    # phase 1: train with periodic CORE checkpoints
+    state = tr.run()
+    d0 = state_digest(state)
+    first, last = tr.metrics_log[0]["loss"], tr.metrics_log[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'LEARNING' if last < first else 'no improvement?'})")
+    print(f"final-state digest {d0}")
+
+    # phase 2: kill storage nodes; checkpoint blocks on them are gone
+    victims = list(range(args.kill_nodes))
+    tr.store.fail_nodes(victims)
+    lost = sum(1 for k, n in tr.store.placement.items() if n in victims)
+    print(f"\nkilled nodes {victims} -> {lost} checkpoint blocks unavailable")
+
+    # phase 3+4: degraded restore through the failures, verify digest
+    restored = tr.restore_latest()
+    rep = tr.last_restore_report
+    d1 = state_digest(restored)
+    print(f"degraded restore: fetched {rep.blocks_fetched} blocks "
+          f"({rep.bytes_fetched/1e6:.1f} MB), digest {d1} "
+          f"{'== OK' if d1 == d0 else '!= CORRUPT'}")
+    assert d1 == d0
+
+    # phase 5: background repair regenerates the lost blocks onto the
+    # surviving nodes while the victims are still dead, then train on
+    fix = tr.ckpt.repair(int(np.asarray(restored.step)))
+    print(f"background repair: {fix.blocks_repaired} blocks regenerated "
+          f"(schedules [{fix.schedule[:60]}…]), fetched {fix.blocks_fetched} blocks")
+    for n in victims:
+        tr.store.heal_node(n)  # replacement hosts may rejoin later
+
+    tr.lc.steps = args.steps + 30
+    state = tr.run(state=restored, until=args.steps + 30)
+    print(f"\nresumed to step {int(np.asarray(state.step))}; "
+          f"loss {tr.metrics_log[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

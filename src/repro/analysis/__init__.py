@@ -1,0 +1,1 @@
+from repro.analysis.roofline import Roofline, analyze_compiled, analyze_hlo  # noqa: F401

@@ -1,0 +1,4 @@
+from repro.checkpoint.core_ckpt import CheckpointManifest, CoreCheckpointer
+from repro.checkpoint import partition
+
+__all__ = ["CheckpointManifest", "CoreCheckpointer", "partition"]

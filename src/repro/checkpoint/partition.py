@@ -1,0 +1,75 @@
+"""Pytree <-> fixed-size byte-block partitioning for CORE checkpoints.
+
+A checkpoint is serialized leaf-by-leaf into one byte stream per *shard
+stream* (in a multi-host deployment each host serializes its local
+shards; here one stream per save). The stream is chunked into
+``block_size`` blocks; k consecutive blocks form one *object* (an RS
+stripe); t objects form one CORE group (the cross-object dimension).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # registers bfloat16/fp8 dtype strings with numpy
+import numpy as np
+
+
+@dataclass
+class LeafSpec:
+    shape: tuple[int, ...]
+    dtype: str
+    nbytes: int
+
+
+@dataclass
+class StreamSpec:
+    treedef: object
+    leaves: list[LeafSpec]
+    total_bytes: int
+    block_size: int
+    k: int
+    t: int
+    num_groups: int
+    pad_bytes: int
+
+
+def tree_to_stream(tree) -> tuple[bytes, object, list[LeafSpec]]:
+    leaves, treedef = jax.tree.flatten(tree)
+    specs, chunks = [], []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        specs.append(LeafSpec(shape=arr.shape, dtype=str(arr.dtype), nbytes=arr.nbytes))
+        chunks.append(arr.tobytes())
+    return b"".join(chunks), treedef, specs
+
+
+def stream_to_tree(stream: bytes, treedef, specs: list[LeafSpec]):
+    leaves = []
+    off = 0
+    for spec in specs:
+        raw = stream[off : off + spec.nbytes]
+        off += spec.nbytes
+        dtype = np.dtype(getattr(ml_dtypes, spec.dtype, spec.dtype))
+        leaves.append(np.frombuffer(raw, dtype=dtype).reshape(spec.shape))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def stream_to_objects(
+    stream: bytes, block_size: int, k: int, t: int
+) -> tuple[np.ndarray, StreamSpec, object, list[LeafSpec]]:
+    """bytes -> (num_groups, t, k, block_size) uint8 object array (padded)."""
+    data = np.frombuffer(stream, dtype=np.uint8)
+    group_bytes = block_size * k * t
+    pad = (-data.size) % group_bytes
+    if pad:
+        data = np.concatenate([data, np.zeros(pad, dtype=np.uint8)])
+    num_groups = data.size // group_bytes
+    objects = data.reshape(num_groups, t, k, block_size)
+    return objects, pad, num_groups
+
+
+def objects_to_stream(objects: np.ndarray, total_bytes: int) -> bytes:
+    return objects.reshape(-1).tobytes()[:total_bytes]

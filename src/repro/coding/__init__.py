@@ -1,0 +1,18 @@
+from repro.coding import gf256, linear, lrc, rs, spc
+from repro.coding.linear import LinearCode
+from repro.coding.lrc import LRC, make_lrc
+from repro.coding.rs import make_rs
+from repro.coding.spc import make_spc
+
+__all__ = [
+    "gf256",
+    "linear",
+    "lrc",
+    "rs",
+    "spc",
+    "LinearCode",
+    "LRC",
+    "make_lrc",
+    "make_rs",
+    "make_spc",
+]

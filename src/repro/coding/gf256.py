@@ -1,0 +1,167 @@
+"""GF(2^8) arithmetic, vectorized for JAX.
+
+The field is F_{2^8} with the standard AES/Rijndael reduction polynomial
+x^8 + x^4 + x^3 + x + 1 (0x11B). Elements are uint8. Addition is XOR.
+Multiplication uses log/exp tables generated once at import time with
+numpy (host-side), then captured as jnp constants inside jitted code.
+
+Conventions used throughout the codebase:
+  * ``LOG[0]`` is never read on the fast path — multiplication masks zero
+    operands explicitly.
+  * ``EXP`` is doubled (length 510) so ``EXP[LOG[a] + LOG[b]]`` needs no
+    modular reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Table generation (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+_POLY = 0x11B  # x^8 + x^4 + x^3 + x + 1
+_GENERATOR = 0x03  # 3 is a primitive element for 0x11B
+
+
+def _build_tables() -> tuple[np.ndarray, np.ndarray]:
+    exp = np.zeros(510, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        # multiply x by the generator (0x03 = x + 1): x*3 = (x<<1) ^ x
+        x = (x << 1) ^ x
+        if x & 0x100:
+            x ^= _POLY
+    exp[255:510] = exp[0:255]
+    return exp, log
+
+
+_EXP_NP, _LOG_NP = _build_tables()
+
+# Full 256x256 multiplication table (64 KiB) — used by the reference paths
+# and for building per-matrix lookup tables. Host-side only.
+_MUL_NP = np.zeros((256, 256), dtype=np.uint8)
+_nz = np.arange(1, 256)
+_MUL_NP[1:, 1:] = _EXP_NP[(_LOG_NP[_nz][:, None] + _LOG_NP[_nz][None, :])]
+
+_INV_NP = np.zeros(256, dtype=np.uint8)
+_INV_NP[1:] = _EXP_NP[255 - _LOG_NP[_nz]]
+
+
+# ---------------------------------------------------------------------------
+# JAX-facing API
+# ---------------------------------------------------------------------------
+
+def exp_table() -> jnp.ndarray:
+    return jnp.asarray(_EXP_NP)
+
+
+def log_table() -> jnp.ndarray:
+    return jnp.asarray(_LOG_NP)
+
+
+def add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Field addition == XOR (also subtraction)."""
+    return jnp.bitwise_xor(a, b)
+
+
+def mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise field multiplication via log/exp tables."""
+    a = a.astype(jnp.uint8)
+    b = b.astype(jnp.uint8)
+    la = jnp.asarray(_LOG_NP)[a.astype(jnp.int32)]
+    lb = jnp.asarray(_LOG_NP)[b.astype(jnp.int32)]
+    prod = jnp.asarray(_EXP_NP)[la + lb]
+    zero = (a == 0) | (b == 0)
+    return jnp.where(zero, jnp.uint8(0), prod)
+
+
+def inv(a: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise multiplicative inverse. inv(0) := 0 (never used)."""
+    return jnp.asarray(_INV_NP)[a.astype(jnp.int32)]
+
+
+def pow_(a: int, e: int) -> int:
+    """Host-side scalar power (for generator-matrix construction)."""
+    if e == 0:
+        return 1
+    if a == 0:
+        return 0
+    return int(_EXP_NP[(int(_LOG_NP[a]) * e) % 255])
+
+
+def mul_scalar_np(a: int, b: int) -> int:
+    return int(_MUL_NP[a, b])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """GF(2^8) matrix multiply: C[i,j] = XOR_k a[i,k]*b[k,j].
+
+    a: (M, K) uint8, b: (..., K, N) uint8 -> (..., M, N) uint8 (batched
+    over b's leading dims). Pure-jnp implementation (the Pallas kernel in
+    repro.kernels is the TPU-optimized version; this is the oracle / CPU
+    fallback).
+    """
+    a = a.astype(jnp.uint8)
+    b = b.astype(jnp.uint8)
+    # (M, K, 1) x (..., 1, K, N) -> (..., M, K, N), XOR-reduce over K
+    prod = mul(a[:, :, None], b[..., None, :, :])
+    return _xor_reduce(prod, axis=-2)
+
+
+def _xor_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    return jax.lax.reduce(
+        x, jnp.uint8(0), jax.lax.bitwise_xor, dimensions=(axis % x.ndim,)
+    )
+
+
+def xor_reduce(x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """XOR-reduce along ``axis`` (vertical-parity primitive)."""
+    return _xor_reduce(x, axis)
+
+
+# ---------------------------------------------------------------------------
+# Host-side matrix helpers over GF(2^8) (numpy; used for generator matrices
+# and erasure-decoding matrix inversion — all small: n, k <= a few dozen)
+# ---------------------------------------------------------------------------
+
+def np_matmul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Host-side GF matmul for small matrices: (M,K) @ (K,N)."""
+    a = a.astype(np.uint8)
+    b = b.astype(np.uint8)
+    out = np.zeros((a.shape[0], b.shape[1]), dtype=np.uint8)
+    for k in range(a.shape[1]):
+        out ^= _MUL_NP[a[:, k][:, None], b[k, :][None, :]]
+    return out
+
+
+def np_inv_matrix(m: np.ndarray) -> np.ndarray:
+    """Host-side Gauss-Jordan inversion over GF(2^8). Raises if singular."""
+    m = m.astype(np.uint8).copy()
+    n = m.shape[0]
+    assert m.shape == (n, n)
+    aug = np.concatenate([m, np.eye(n, dtype=np.uint8)], axis=1)
+    for col in range(n):
+        pivot = None
+        for row in range(col, n):
+            if aug[row, col] != 0:
+                pivot = row
+                break
+        if pivot is None:
+            raise np.linalg.LinAlgError("singular GF(256) matrix")
+        if pivot != col:
+            aug[[col, pivot]] = aug[[pivot, col]]
+        pinv = _INV_NP[aug[col, col]]
+        aug[col] = _MUL_NP[pinv, aug[col]]
+        for row in range(n):
+            if row != col and aug[row, col] != 0:
+                aug[row] ^= _MUL_NP[aug[row, col], aug[col]]
+    return aug[:, n:]

@@ -1,0 +1,8 @@
+# The paper's compute hot spots: RS encode/decode (GF(2^8) matmul) and
+# vertical XOR parity — see DESIGN.md §3 for the TPU adaptation
+# (bit-plane GF multiply on the VPU; no MXU mapping exists for field
+# arithmetic).
+from repro.kernels import ops, ref
+from repro.kernels.ops import gf256_matmul, rs_decode, rs_encode, xor_parity
+
+__all__ = ["ops", "ref", "gf256_matmul", "rs_decode", "rs_encode", "xor_parity"]

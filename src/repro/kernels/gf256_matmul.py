@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: GF(2^8) coefficient-matrix x block-data multiply.
+
+This is the compute hot spot of erasure coding: RS encode
+(parity = P @ data), RS erasure decode (message = Inv @ survivors) and
+repair (missing = Coef @ sources) are all `small coefficient matrix (M,K)
+x large byte matrix (K, N)` products over GF(2^8).
+
+TPU adaptation (DESIGN.md §3): the MXU cannot do field arithmetic and
+per-byte 256-entry table gathers are VPU-hostile. We instead *bit-slice*
+the data operand:
+
+    gfmul(c, x) = XOR_{b=0..7} ((x >> b) & 1) * gfmul(c, 2^b)
+
+The 8 constants gfmul(c, 2^b) per coefficient are precomputed host-side
+into an (M, K, 8) tensor, so the kernel body is pure VPU work: shifts,
+masks, byte multiplies by 0/1 (select), XOR accumulation — no gathers, no
+tables. Cost: 8 fused select-XOR passes over the data tile per (m, k)
+coefficient. For RS codes (K <= 16, M <= 4) the working set is the
+(K, BN) data tile + (M, BN) accumulator, tiled to stay within VMEM.
+
+Grid: 1-D over the byte dimension N in BN-sized tiles. BN defaults to
+32768 bytes (lane-aligned: 256 sublanes x 128 lanes at u8): data tiles
+of K x BN <= 16 x 32 KiB = 512 KiB + the (M, BN) accumulator stay well
+inside VMEM while amortizing per-step grid/DMA overhead 16x better than
+the original 2 KiB tiles (§Perf kernel iteration: fewer, fatter DMAs on
+a bandwidth-bound kernel; validated vs ref.py across shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.coding import gf256
+
+DEFAULT_BLOCK_N = 32768
+
+
+def expand_coeff_bitplanes(coef: np.ndarray) -> np.ndarray:
+    """(M, K) uint8 coefficient matrix -> (M, K, 8) bit-plane constants
+    Mc[i, k, b] = gfmul(coef[i, k], 2^b). Host-side, tiny."""
+    coef = np.asarray(coef, dtype=np.uint8)
+    planes = np.stack(
+        [gf256._MUL_NP[coef, 1 << b] for b in range(8)], axis=-1
+    )  # (M, K, 8)
+    return planes.astype(np.uint8)
+
+
+def _gf_matmul_kernel(mc_ref, data_ref, out_ref, *, m: int, kk: int):
+    """mc_ref: (M, K, 8) u8 bit-plane constants (whole, VMEM-resident)
+    data_ref: (K, BN) u8 data tile; out_ref: (M, BN) u8."""
+    data = data_ref[...]  # (K, BN)
+    mc = mc_ref[...]  # (M, K, 8)
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.uint8)
+    for b in range(8):
+        bits = jnp.bitwise_and(jnp.right_shift(data, b), jnp.uint8(1))  # (K, BN)
+        for k in range(kk):
+            # select the plane constant where the data bit is set
+            contrib = bits[k][None, :] * mc[:, k, b][:, None]  # (M, BN)
+            acc = jnp.bitwise_xor(acc, contrib)
+    out_ref[...] = acc
+
+
+def _gf_matmul_kernel_packed(mc_ref, data_ref, out_ref, *, m: int, kk: int):
+    """u32-packed variant (§Perf kernel iteration K2): 4 bytes per lane,
+    byte-select via mask-spread (3 shift-or) + AND instead of a byte
+    multiply — ~2x fewer VPU lane-ops than the u8 kernel, guaranteed
+    32-bit lane packing. All ops are byte-lane-safe: (x >> b) & 0x01010101
+    extracts bit b of every byte (b < 8 never crosses a byte boundary)
+    and the 0x01 -> 0xFF mask spread stays inside each byte."""
+    data = data_ref[...]  # (K, BN) u8
+    mc = mc_ref[...]  # (M, K, 8) u8
+    bn = data.shape[1]
+    d32 = jax.lax.bitcast_convert_type(
+        data.reshape(kk, bn // 4, 4), jnp.uint32
+    )  # (K, BN/4)
+    one = jnp.uint32(0x01010101)
+    acc = jnp.zeros((m, bn // 4), jnp.uint32)
+    for b in range(8):
+        bits = jnp.bitwise_and(jnp.right_shift(d32, jnp.uint32(b)), one)
+        sel = jnp.bitwise_or(bits, jnp.left_shift(bits, jnp.uint32(1)))
+        sel = jnp.bitwise_or(sel, jnp.left_shift(sel, jnp.uint32(2)))
+        sel = jnp.bitwise_or(sel, jnp.left_shift(sel, jnp.uint32(4)))  # 0x00/0xFF
+        for k in range(kk):
+            c32 = mc[:, k, b].astype(jnp.uint32) * one  # (M,) byte-splat
+            acc = jnp.bitwise_xor(
+                acc, jnp.bitwise_and(sel[k][None, :], c32[:, None])
+            )
+    out_ref[...] = jax.lax.bitcast_convert_type(acc, jnp.uint8).reshape(m, bn)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "packed")
+)
+def gf256_matmul_planes(
+    mc: jnp.ndarray,
+    data: jnp.ndarray,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+    packed: bool = False,
+) -> jnp.ndarray:
+    """C (M, N) = coefficient-matrix x data over GF(2^8).
+
+    mc: (M, K, 8) bit-plane constants (see expand_coeff_bitplanes)
+    data: (K, N) uint8; N must be a multiple of block_n (ops.py pads).
+    packed selects the u32 mask-spread kernel (K2) — structurally
+    ~2x fewer VPU lane-ops on TPU, but slower under the CPU interpreter
+    (bitcast overhead), so the measured-on-this-host default is False;
+    flip it on real TPU (EXPERIMENTS.md §Perf K2).
+    """
+    m, kk, _ = mc.shape
+    k2, n = data.shape
+    assert kk == k2, (mc.shape, data.shape)
+    assert n % block_n == 0, (n, block_n)
+    kern = _gf_matmul_kernel_packed if (packed and block_n % 4 == 0) else _gf_matmul_kernel
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(kern, m=m, kk=kk),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, kk, 8), lambda j: (0, 0, 0)),  # coefficients: replicated
+            pl.BlockSpec((k2, block_n), lambda j: (0, j)),  # data tile
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j: (0, j)),
+        interpret=interpret,
+    )(mc, data)

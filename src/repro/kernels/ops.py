@@ -1,0 +1,88 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile boundaries, host-side coefficient bit-plane
+expansion, and interpret-mode selection (interpret=True executes the
+kernel body in Python on CPU; on a real TPU backend pass
+``interpret=False`` / rely on the default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gf256_matmul as _gfk
+from repro.kernels import xor_parity as _xpk
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad), n
+
+
+def gf256_matmul(
+    coef: np.ndarray,
+    data: jnp.ndarray,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """C (M, N) = coef (M, K) @ data (K, N) over GF(2^8), Pallas-backed.
+
+    ``coef`` is a host-side numpy matrix (generator/repair coefficients);
+    its bit-plane expansion happens at trace time and is constant-folded.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    n = data.shape[-1]
+    if block_n is None:
+        block_n = min(_gfk.DEFAULT_BLOCK_N, _next_pow2(n))
+    mc = jnp.asarray(_gfk.expand_coeff_bitplanes(np.asarray(coef)))
+    data = data.astype(jnp.uint8)
+    data_p, orig_n = _pad_to(data, block_n, axis=-1)
+    out = _gfk.gf256_matmul_planes(mc, data_p, block_n=block_n, interpret=interpret)
+    return out[:, :orig_n]
+
+
+def xor_parity(
+    data: jnp.ndarray, *, block_n: int | None = None, interpret: bool | None = None
+) -> jnp.ndarray:
+    """data (T, N) uint8 -> (N,) XOR over rows, Pallas-backed."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = data.shape[-1]
+    if block_n is None:
+        block_n = min(_xpk.DEFAULT_BLOCK_N, _next_pow2(n))
+    data = data.astype(jnp.uint8)
+    data_p, orig_n = _pad_to(data, block_n, axis=-1)
+    out = _xpk.xor_parity(data_p, block_n=block_n, interpret=interpret)
+    return out[:orig_n]
+
+
+def rs_encode(parity_matrix: np.ndarray, data: jnp.ndarray, **kw) -> jnp.ndarray:
+    """RS parity blocks (m, q) from data blocks (k, q)."""
+    return gf256_matmul(parity_matrix, data, **kw)
+
+
+def rs_decode(inverse: np.ndarray, survivors: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Message blocks (k, q) = decode-inverse (k, k) @ survivors (k, q)."""
+    return gf256_matmul(inverse, survivors, **kw)
+
+
+def _next_pow2(n: int) -> int:
+    p = 128
+    while p < n:
+        p *= 2
+    return p

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Pallas kernels (the reference implementations
+the kernels are validated against, per-shape/dtype, in tests)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.coding import gf256
+
+
+def gf256_matmul(coef: jnp.ndarray, data: jnp.ndarray) -> jnp.ndarray:
+    """C (M, N) = coef (M, K) x data (K, N) over GF(2^8)."""
+    return gf256.matmul(coef, data)
+
+
+def xor_parity(data: jnp.ndarray) -> jnp.ndarray:
+    """data (T, N) -> (N,) XOR of rows."""
+    return gf256.xor_reduce(data, axis=0)

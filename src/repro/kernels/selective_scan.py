@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused selective-scan (Mamba-1 recurrence + output
+projection) — the identified fix for the worst-roofline cell
+(falcon_mamba x train_4k: t_mem/t_comp = 41x, EXPERIMENTS.md §Perf).
+
+    h_t = da_t * h_{t-1} + dbu_t          (diagonal, per (d, n))
+    y_t = sum_n h_t[d, n] * c_t[n]
+
+The pure-JAX path (models/mamba.py) materializes the (B, S, D, N) state
+through HBM log2(S) times via associative_scan. Here the state lives in
+a VMEM scratch carried across *sequential* grid steps over S, so HBM
+traffic is exactly: read da + dbu + c, write y — the roofline floor.
+
+Grid: (B, D/BD, S/BS) with the S dimension innermost/sequential
+("arbitrary" semantics on TPU); scratch (BD, N) persists across the S
+steps of one (b, d-block) and resets at s == 0. BS x BD x N f32 blocks
+(default 64 x 256 x 16 = 1 MiB) double-buffer comfortably in VMEM.
+
+Validated bit-close against ref.selective_scan in
+tests/test_selective_scan_kernel.py (interpret mode; shapes/chunks swept).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BS = 64  # seq positions per grid step
+DEFAULT_BD = 256  # channels per grid step
+
+
+def _selective_scan_kernel(da_ref, dbu_ref, c_ref, y_ref, h_ref, *, bs: int):
+    """da/dbu: (1, BS, BD, N); c: (1, BS, N); y: (1, BS, BD);
+    h (scratch): (BD, N) persistent across the sequential S dimension."""
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    h = h_ref[...]
+    da = da_ref[0]
+    dbu = dbu_ref[0]
+    c = c_ref[0]
+    ys = []
+    for t in range(bs):  # static unroll inside the block
+        h = da[t] * h + dbu[t]
+        ys.append(jnp.sum(h * c[t][None, :], axis=-1))  # (BD,)
+    y_ref[0] = jnp.stack(ys, axis=0)
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bd", "interpret"))
+def selective_scan(
+    da: jnp.ndarray,
+    dbu: jnp.ndarray,
+    cm: jnp.ndarray,
+    *,
+    bs: int = DEFAULT_BS,
+    bd: int = DEFAULT_BD,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """da, dbu: (B, S, D, N) f32; cm: (B, S, N) f32 -> y (B, S, D) f32."""
+    b, s, d, n = da.shape
+    bs = min(bs, s)
+    bd = min(bd, d)
+    assert s % bs == 0 and d % bd == 0, (s, bs, d, bd)
+    grid = (b, d // bd, s // bs)
+    return pl.pallas_call(
+        functools.partial(_selective_scan_kernel, bs=bs),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, bd, n), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, bs, bd, n), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, bs, n), lambda i, j, k: (i, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bd), lambda i, j, k: (i, k, j)),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(da, dbu, cm)

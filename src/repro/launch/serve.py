@@ -1,0 +1,104 @@
+"""Serving launcher: batched prefill + continuous-batching decode.
+
+``python -m repro.launch.serve --arch olmoe_1b_7b --reduced --requests 8``
+runs a greedy-decoding service loop over synthetic prompts with the
+SlotManager (serve/kvcache.py) and prints per-request completions +
+aggregate token throughput.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models.registry import get_model
+    from repro.models.shardings import SINGLE, ServePlan
+    from repro.serve.kvcache import Request, SlotManager
+    from repro.serve.serve_step import greedy_sample
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+    ax = SINGLE
+    plan = ServePlan()
+
+    rng = jax.random.PRNGKey(0)
+    params = api.init(cfg, rng)
+
+    # one shared batched cache; each slot holds one live request
+    mgr = SlotManager(batch=args.batch, cache_len=args.cache_len)
+    for rid in range(args.requests):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.fold_in(rng, rid),
+                               (args.prompt_len,), 0, cfg.vocab_size),
+            np.int32,
+        )
+        mgr.submit(Request(rid, prompt, args.max_new))
+
+    cache = api.init_cache(cfg, args.batch, args.cache_len)
+
+    decode = jax.jit(
+        lambda p, t, c, pos: api.decode(p, t, c, pos, cfg, ax, plan)
+    )
+
+    def prefill_into_slot(slot: int, req: Request, cache):
+        """Prefill one request's prompt through the decode path (keeps
+        the shared batched cache layout slot-aligned)."""
+        for j, t in enumerate(req.prompt[:-1]):
+            tok = np.zeros((args.batch, 1), np.int32)
+            tok[slot, 0] = t
+            _, cache = decode(params, jnp.asarray(tok), cache, jnp.asarray(j))
+        return cache
+
+    done_tokens = 0
+    t0 = time.perf_counter()
+    step = 0
+    while mgr.live or mgr.waiting:
+        for slot, req in mgr.admit():
+            cache = prefill_into_slot(slot, req, cache)
+        tok = jnp.asarray(mgr.step_tokens())
+        pos = int(mgr.pos.max() - 1) if mgr.pos.max() else 0
+        logits, cache = decode(params, tok, cache, jnp.asarray(pos))
+        nxt = np.asarray(greedy_sample(logits))[:, 0]
+        mgr.record(nxt)
+        done_tokens += mgr.live
+        step += 1
+        if step > args.requests * (args.max_new + args.prompt_len) + 100:
+            break
+    dt = time.perf_counter() - t0
+    print(f"served {len(mgr.finished)} requests, "
+          f"{sum(len(r.generated) for r in mgr.finished)} tokens "
+          f"in {dt:.2f}s")
+    for r in mgr.finished[:4]:
+        print(f"  req {r.rid}: {r.generated[:8]}…")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

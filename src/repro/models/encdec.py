@@ -1,0 +1,240 @@
+"""Encoder-decoder transformer backbone (seamless-m4t family).
+
+The modality frontend is a STUB per the brief: ``input_specs`` provides
+precomputed speech-frame embeddings (B, T_frames, d_model). The encoder
+(24 bidirectional layers), decoder (24 layers: causal self-attn +
+cross-attn + classic gelu MLP) and vocab head are real.
+
+Positions: sinusoidal absolute (added to embeddings), as in the
+NLLB/transformer lineage — no RoPE.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models import transformer as T
+from repro.models.shardings import MeshAxes, constrain
+
+
+def sinusoid(positions, d: int):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (S, d)
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def init_enc_layer(rng, cfg: ArchConfig):
+    return T.init_decoder_layer(rng, cfg)  # same shape: attn + mlp
+
+
+def init_dec_layer(rng, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "self_attn": L.init_attn(k1, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "cross_attn": L.init_attn(k2, cfg),
+        "ln3": L.init_norm(cfg, cfg.d_model),
+        "ffn": L.init_mlp(k3, cfg),
+    }
+
+
+def dec_layer_specs(cfg: ArchConfig, ax: MeshAxes):
+    return {
+        "ln1": T.norm_specs(cfg),
+        "self_attn": T.attn_specs(cfg, ax),
+        "ln2": T.norm_specs(cfg),
+        "cross_attn": T.attn_specs(cfg, ax),
+        "ln3": T.norm_specs(cfg),
+        "ffn": T.mlp_specs(cfg, ax),
+    }
+
+
+def init_lm(cfg: ArchConfig, rng) -> dict:
+    ke, k1, k2, kh = jax.random.split(rng, 4)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "enc": stack.stacked_init(
+            functools.partial(init_enc_layer, cfg=cfg), k1, cfg.enc_layers
+        ),
+        "dec": stack.stacked_init(
+            functools.partial(init_dec_layer, cfg=cfg), k2, cfg.dec_layers
+        ),
+        "ln_enc": L.init_norm(cfg, cfg.d_model),
+        "ln_dec": L.init_norm(cfg, cfg.d_model),
+        "head": L.init_dense(kh, cfg.d_model, cfg.vocab_size, False)["w"],
+    }
+
+
+def lm_specs(cfg: ArchConfig, ax: MeshAxes) -> dict:
+    return {
+        "embed": P(ax.tp_if(cfg.vocab_size), ax.fsdp_if(cfg.d_model)),
+        "enc": stack.stacked_specs(T.decoder_layer_specs(cfg, ax)),
+        "dec": stack.stacked_specs(dec_layer_specs(cfg, ax)),
+        "ln_enc": T.norm_specs(cfg),
+        "ln_dec": T.norm_specs(cfg),
+        "head": P(ax.fsdp_if(cfg.d_model), ax.tp_if(cfg.vocab_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def encode(params, src_embed, cfg: ArchConfig, ax: MeshAxes):
+    """src_embed: (B, T, D) precomputed frames -> encoder states (B, T, D)."""
+    b, t, d = src_embed.shape
+    x = src_embed.astype(jnp.bfloat16) + sinusoid(jnp.arange(t), d)[None].astype(jnp.bfloat16)
+    x = constrain(x, T.res_spec(ax, t))
+
+    def body(h, lp):
+        h = h + L.attention_train(
+            L.norm(h, lp["ln1"], cfg), lp["attn"], cfg, ax, None, bidirectional=True
+        )
+        h = constrain(h, T.res_spec(ax, t))
+        h = h + L.mlp(L.norm(h, lp["ln2"], cfg), lp["ffn"], cfg, ax)
+        return constrain(h, T.res_spec(ax, t))
+
+    x = stack.scan_layers(body, x, params["enc"])
+    return L.norm(x, params["ln_enc"], cfg)
+
+
+def _cross_kv(mem, lp, cfg: ArchConfig):
+    b, t, _ = mem.shape
+    k = L.dense(mem, lp["cross_attn"]["wk"]["w"], lp["cross_attn"]["wk"].get("b"))
+    v = L.dense(mem, lp["cross_attn"]["wv"]["w"], lp["cross_attn"]["wv"].get("b"))
+    return (
+        k.reshape(b, t, cfg.num_kv_heads, cfg.head_dim),
+        v.reshape(b, t, cfg.num_kv_heads, cfg.head_dim),
+    )
+
+
+def apply_dec_layer(x, lp, mem, cfg: ArchConfig, ax: MeshAxes):
+    s = x.shape[1]
+    x = x + L.attention_train(L.norm(x, lp["ln1"], cfg), lp["self_attn"], cfg, ax, None)
+    x = constrain(x, T.res_spec(ax, s))
+    mk, mv = _cross_kv(mem, lp, cfg)
+    x = x + L.cross_attention(L.norm(x, lp["ln2"], cfg), mk, mv, lp["cross_attn"], cfg, ax)
+    x = constrain(x, T.res_spec(ax, s))
+    x = x + L.mlp(L.norm(x, lp["ln3"], cfg), lp["ffn"], cfg, ax)
+    return constrain(x, T.res_spec(ax, s))
+
+
+def lm_loss(params, batch, cfg: ArchConfig, ax: MeshAxes):
+    mem = encode(params, batch["src_embed"], cfg, ax)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, ax)
+    x = x + sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    x = constrain(x, T.res_spec(ax, s))
+
+    def body(h, lp):
+        return apply_dec_layer(h, lp, mem, cfg, ax)
+
+    x = stack.scan_layers(body, x, params["dec"])
+    x = L.norm(x, params["ln_dec"], cfg)
+    return T.chunked_xent(x, params["head"], batch["labels"], cfg, ax,
+                          batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving (decoder-side KV cache + precomputed cross-attn memory)
+# ---------------------------------------------------------------------------
+
+
+def cache_shape(cfg: ArchConfig, batch: int, cache_len: int, mem_len: int | None = None):
+    mem_len = mem_len or cfg.num_stub_tokens
+    kv = (cfg.dec_layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    xk = (cfg.dec_layers, batch, mem_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(kv, jnp.bfloat16),
+        "mem_k": jax.ShapeDtypeStruct(xk, jnp.bfloat16),
+        "mem_v": jax.ShapeDtypeStruct(xk, jnp.bfloat16),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, mem_len: int | None = None):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shape(cfg, batch, cache_len, mem_len)
+    )
+
+
+def cache_specs(cfg: ArchConfig, ax: MeshAxes, batch: int, plan) -> dict:
+    b = plan.batch_axes or None
+    kv_spec = P(None, b, plan.seq_axes if plan.seq_axes else None,
+                plan.kv_axes if plan.kv_axes else None, None)
+    mem_spec = P(None, b, None, plan.kv_axes if plan.kv_axes else None, None)
+    return {"k": kv_spec, "v": kv_spec, "mem_k": mem_spec, "mem_v": mem_spec}
+
+
+def prefill(params, tokens, cfg: ArchConfig, ax: MeshAxes, cache_len: int, src_embed=None):
+    """Encoder pass + decoder prompt pass; returns (last logits, cache)."""
+    mem = encode(params, src_embed, cfg, ax)
+    b, s = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, ax)
+    x = x + sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    x = constrain(x, T.res_spec(ax, s))
+
+    def body(h, lp):
+        xn = L.norm(h, lp["ln1"], cfg)
+        q, k, v = L.qkv_proj(xn, lp["self_attn"], cfg, ax, None)
+        ke, ve = L.expand_kv(k, cfg), L.expand_kv(v, cfg)
+        o = L.attention_core_train(q, ke, ve, cfg, ax)
+        h = h + L.dense(o, lp["self_attn"]["wo"]["w"], lp["self_attn"]["wo"].get("b"))
+        mk, mv = _cross_kv(mem, lp, cfg)
+        h = h + L.cross_attention(L.norm(h, lp["ln2"], cfg), mk, mv, lp["cross_attn"], cfg, ax)
+        h = h + L.mlp(L.norm(h, lp["ln3"], cfg), lp["ffn"], cfg, ax)
+        return constrain(h, T.res_spec(ax, s)), (k, v, mk, mv)
+
+    x, (ks, vs, mks, mvs) = jax.lax.scan(lambda c, lp: body(c, lp), x, params["dec"])
+    x = L.norm(x, params["ln_dec"], cfg)
+    logits = L.unembed(x[:, -1:], params["head"], ax, cfg.vocab_size)
+    pad = cache_len - s
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {
+        "k": ks.astype(jnp.bfloat16),
+        "v": vs.astype(jnp.bfloat16),
+        "mem_k": mks.astype(jnp.bfloat16),
+        "mem_v": mvs.astype(jnp.bfloat16),
+    }
+    return logits[:, 0], cache
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig, ax: MeshAxes, plan):
+    x = L.embed_tokens(params["embed"], token, ax)
+    x = x + sinusoid(jnp.full((1,), pos), cfg.d_model)[None].astype(x.dtype)
+
+    def body(h, lp, lc):
+        xn = L.norm(h, lp["ln1"], cfg)
+        o, nk, nv = L.attention_decode_general(
+            xn, lc["k"], lc["v"], lp["self_attn"], cfg, ax, pos, plan
+        )
+        h = h + o
+        h = h + L.cross_attention(
+            L.norm(h, lp["ln2"], cfg), lc["mem_k"], lc["mem_v"], lp["cross_attn"], cfg, ax
+        )
+        h = h + L.mlp(L.norm(h, lp["ln3"], cfg), lp["ffn"], cfg, ax)
+        return h, {"k": nk, "v": nv, "mem_k": lc["mem_k"], "mem_v": lc["mem_v"]}
+
+    x, new_cache = stack.scan_layers_with_cache(body, x, params["dec"], cache)
+    x = L.norm(x, params["ln_dec"], cfg)
+    logits = L.unembed(x, params["head"], ax, cfg.vocab_size)
+    return logits[:, 0], new_cache

@@ -1,0 +1,270 @@
+"""Mamba-1 selective SSM (falcon-mamba family). Attention-free.
+
+Train path: chunked selective scan — within a chunk the diagonal
+recurrence h_t = a_t * h_{t-1} + b_t runs as an associative scan; chunk
+carries propagate through an outer lax.scan. The (B, chunk, d_inner, N)
+state tensor only ever exists per-chunk, sharded on tp over d_inner.
+
+Decode path: O(1) state update per token (conv ring + ssm state); this
+is why long_500k is *native* for this family (DESIGN.md §6).
+
+TPU adaptation: d_inner (= expand * d_model) is the tensor-parallel dim;
+the recurrence is independent per channel so the scan needs no
+collectives — x_proj (row-parallel) and dt/B/C broadcast are the only
+tp-crossing ops per layer.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models.shardings import MeshAxes, constrain
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_layer(rng, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(rng, 6)
+
+    def w(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    # S4D-real init for A; dt bias init for softplus ~ [1e-3, 1e-1]
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[0], (di,), jnp.float32)
+        * (math.log(1e-1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "norm": L.init_norm(cfg, d),
+        "in_proj": {"w": w(ks[1], (d, 2 * di), 1.0 / math.sqrt(d))},
+        "conv_w": w(ks[2], (cfg.d_conv, di), 1.0 / math.sqrt(cfg.d_conv)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": {"w": w(ks[3], (di, r + 2 * n), 1.0 / math.sqrt(di))},
+        "dt_proj": {"w": w(ks[4], (r, di), 1.0 / math.sqrt(r)), "b": dt_bias},
+        "a_log": a_log,
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": {"w": w(ks[5], (di, d), 1.0 / math.sqrt(di))},
+    }
+
+
+def mamba_layer_specs(cfg: ArchConfig, ax: MeshAxes):
+    tp = ax.tp_if(cfg.d_inner)
+    fs = ax.fsdp_if(cfg.d_model)
+    return {
+        "norm": {"scale": P(None)},
+        "in_proj": {"w": P(fs, tp)},
+        "conv_w": P(None, tp),
+        "conv_b": P(tp),
+        "x_proj": {"w": P(tp, None)},
+        "dt_proj": {"w": P(None, tp), "b": P(tp)},
+        "a_log": P(tp, None),
+        "d_skip": P(tp),
+        "out_proj": {"w": P(tp, fs)},
+    }
+
+
+def init_lm(cfg: ArchConfig, rng) -> dict:
+    ke, kl = jax.random.split(rng)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "layers": stack.stacked_init(
+            functools.partial(init_mamba_layer, cfg=cfg), kl, cfg.num_layers
+        ),
+        "ln_f": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def lm_specs(cfg: ArchConfig, ax: MeshAxes) -> dict:
+    return {
+        "embed": P(ax.tp_if(cfg.vocab_size), ax.fsdp_if(cfg.d_model)),
+        "layers": stack.stacked_specs(mamba_layer_specs(cfg, ax)),
+        "ln_f": {"scale": P(None)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, conv_w, conv_b, init_state=None):
+    """Depthwise causal conv. x: (B, S, di); conv_w: (K, di).
+    init_state: (B, K-1, di) carried from the previous chunk (zeros at
+    t=0). Returns (y (B,S,di), new_state (B, K-1, di))."""
+    k = conv_w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * conv_w[i].astype(x.dtype) for i in range(k)
+    )
+    return y + conv_b.astype(x.dtype), xp[:, -(k - 1):]
+
+
+def _ssm_params(u, p, cfg: ArchConfig):
+    """u: (B, S, di) post-conv. Returns dA (B,S,di,N) f32, dBu (B,S,di,N) f32,
+    C (B,S,N) f32."""
+    n, r = cfg.ssm_state, cfg.dt_rank
+    xdbc = L.dense(u, p["x_proj"]["w"])  # (B,S,r+2N)
+    dt_r, bm, cm = jnp.split(xdbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (L.dense(dt_r, p["dt_proj"]["w"]) + p["dt_proj"]["b"]).astype(jnp.float32)
+    )  # (B,S,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, N)
+    da = jnp.exp(dt[..., None] * a[None, None])  # (B,S,di,N)
+    dbu = (dt * u.astype(jnp.float32))[..., None] * bm.astype(jnp.float32)[:, :, None, :]
+    return da, dbu, cm.astype(jnp.float32)
+
+
+def _chunk_scan(da, dbu, h0):
+    """Associative scan of h_t = da_t h_{t-1} + dbu_t within one chunk.
+    da/dbu: (B, c, di, N) f32; h0: (B, di, N) f32. Returns (h_all, h_last)."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+    h_all = b_cum + a_cum * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_mix(x, p, cfg: ArchConfig, ax: MeshAxes, init_state=None):
+    """The Mamba mixer. x: (B, S, d_model) -> (B, S, d_model).
+    init_state: None (train) or dict(conv, ssm) for stateful chunks."""
+    b, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    tp = ax.tp_if(di)
+    xz = L.dense(x, p["in_proj"]["w"])  # (B,S,2di)
+    xz = constrain(xz, P(ax.dp, None, tp))
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv0 = init_state["conv"] if init_state else None
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv0)
+    u = jax.nn.silu(u)
+    u = constrain(u, P(ax.dp, None, tp))
+
+    chunk = L.fit_chunk(s, cfg.scan_chunk)
+    nch = s // chunk
+    h0 = (
+        init_state["ssm"]
+        if init_state
+        else jnp.zeros((b, di, n), jnp.float32)
+    )
+
+    us = u.reshape(b, nch, chunk, di).transpose(1, 0, 2, 3)
+
+    def body(h, uc):
+        da, dbu, cm = _ssm_params(uc, p, cfg)
+        h_all, h_last = _chunk_scan(da, dbu, h)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, cm)
+        return h_last, y.astype(x.dtype)
+
+    h_last, ys = jax.lax.scan(body, h0, us)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y + u * p["d_skip"].astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, P(ax.dp, None, tp))
+    out = L.dense(y, p["out_proj"]["w"])
+    new_state = {"conv": conv_state, "ssm": h_last}
+    return out, new_state
+
+
+def apply_mamba_layer(x, p, cfg: ArchConfig, ax: MeshAxes):
+    y, _ = mamba_mix(L.norm(x, p["norm"], cfg), p, cfg, ax)
+    return x + y
+
+
+# ---------------------------------------------------------------------------
+# LM entry points
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, batch, cfg: ArchConfig, ax: MeshAxes):
+    from repro.models.transformer import chunked_xent, res_spec
+
+    x = L.embed_tokens(params["embed"], batch["tokens"], ax)
+    s = x.shape[1]
+    x = constrain(x, res_spec(ax, s))
+
+    def body(h, lp):
+        return apply_mamba_layer(h, lp, cfg, ax)
+
+    x = stack.scan_layers(body, x, params["layers"])
+    x = L.norm(x, params["ln_f"], cfg)
+    return chunked_xent(x, params["embed"], batch["labels"], cfg, ax,
+                        batch.get("loss_mask"))
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int = 0):
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    return {
+        "conv": jnp.zeros((cfg.num_layers, batch, k - 1, di), jnp.bfloat16),
+        "ssm": jnp.zeros((cfg.num_layers, batch, di, n), jnp.float32),
+    }
+
+
+def cache_shape(cfg: ArchConfig, batch: int, cache_len: int = 0):
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    return {
+        "conv": jax.ShapeDtypeStruct((cfg.num_layers, batch, k - 1, di), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((cfg.num_layers, batch, di, n), jnp.float32),
+    }
+
+
+def cache_specs(cfg: ArchConfig, ax: MeshAxes, batch: int, plan) -> dict:
+    b = plan.batch_axes or None
+    tp = ax.tp_if(cfg.d_inner)
+    return {
+        "conv": P(None, b, None, tp),
+        "ssm": P(None, b, tp, None),
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, ax: MeshAxes, cache_len: int):
+    """Run the full prompt, returning last-token logits + decode state."""
+    from repro.models.transformer import res_spec
+
+    x = L.embed_tokens(params["embed"], tokens, ax)
+    s = x.shape[1]
+    x = constrain(x, res_spec(ax, s))
+
+    def body(h, lp):
+        xn = L.norm(h, lp["norm"], cfg)
+        y, st = mamba_mix(xn, lp, cfg, ax)
+        return h + y, st
+
+    x, states = jax.lax.scan(lambda c, lp: body(c, lp), x, params["layers"])
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x[:, -1:], params["embed"], ax, cfg.vocab_size)
+    return logits[:, 0], states
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig, ax: MeshAxes, plan):
+    """Single-token decode: conv ring shift + one recurrence step."""
+    x = L.embed_tokens(params["embed"], token, ax)  # (B,1,D)
+
+    def body(h, lp, lc):
+        xn = L.norm(h, lp["norm"], cfg)
+        y, st = mamba_mix(xn, lp, cfg, ax, init_state=lc)
+        return h + y, st
+
+    x, new_cache = stack.scan_layers_with_cache(body, x, params["layers"], cache)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x, params["embed"], ax, cfg.vocab_size)
+    return logits[:, 0], new_cache

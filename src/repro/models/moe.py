@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN (granite-moe, olmoe families).
+
+Top-k routing with per-sequence capacity groups and gather/scatter
+dispatch — no (S, E, C) one-hot dispatch tensor is ever materialized
+(GShard-style einsum dispatch would be O(S·E·C); here dispatch is two
+gathers + one scatter, O(S·k + E·C)).
+
+Expert placement (DESIGN.md §5): the expert dim shards on the tp axis
+when num_experts % tp == 0 (olmoe 64/16) — expert-parallelism, GSPMD
+inserts the token all-to-alls around the gathers. Otherwise experts
+replicate over tp and the per-expert FFN shards its hidden dim
+(granite: 40 experts, d_ff=512).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.shardings import MeshAxes, constrain
+
+
+def ep_axis(cfg: ArchConfig, ax: MeshAxes):
+    return ax.tp if (ax.tp and cfg.num_experts % ax.tp_size == 0) else None
+
+
+def expert_ff_axis(cfg: ArchConfig, ax: MeshAxes):
+    """TP inside each expert's FFN, only when experts are not EP-sharded."""
+    if ep_axis(cfg, ax) is not None:
+        return None
+    return ax.tp_if(cfg.d_ff)
+
+
+def init_moe(rng, cfg: ArchConfig, dtype=jnp.bfloat16):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+
+    def w(key, shape, scale):
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    return {
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * scale_in},
+        "wg": w(ks[1], (e, d, f), scale_in),
+        "wu": w(ks[2], (e, d, f), scale_in),
+        "wd": w(ks[3], (e, f, d), scale_out),
+    }
+
+
+def moe_specs(cfg: ArchConfig, ax: MeshAxes):
+    ep = ep_axis(cfg, ax)
+    ff = expert_ff_axis(cfg, ax)
+    fs = ax.fsdp_if(cfg.d_model)
+    return {
+        "router": {"w": P(fs, None)},
+        "wg": P(ep, fs, ff),
+        "wu": P(ep, fs, ff),
+        "wd": P(ep, ff, fs),
+    }
+
+
+def capacity(cfg: ArchConfig, s: int) -> int:
+    """Per-sequence expert capacity (tokens/expert), padded to 8."""
+    c = int(math.ceil(cfg.capacity_factor * cfg.experts_per_token * s / cfg.num_experts))
+    return max(8, -(-c // 8) * 8)
+
+
+def route(x, router_w, cfg: ArchConfig):
+    """x: (B, S, D) -> (gates (B,S,kk) f32, expert idx (B,S,kk) i32, aux loss)."""
+    logits = L.einsum_f32("bsd,de->bse", x, router_w.astype(x.dtype))
+    kk = cfg.experts_per_token
+    top_vals, top_idx = jax.lax.top_k(logits, kk)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    # Switch-style load-balance aux: E * sum_e( frac_tokens_e * mean_prob_e )
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = cfg.num_experts
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    ) / kk
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+    return gates, top_idx, aux
+
+
+def moe_ffn(x, p, cfg: ArchConfig, ax: MeshAxes):
+    """Capacity-dropped top-k MoE. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    e, kk = cfg.num_experts, cfg.experts_per_token
+    cap = capacity(cfg, s)
+    ep = ep_axis(cfg, ax)
+    ff = expert_ff_axis(cfg, ax)
+
+    gates, idx, aux = route(x, p["router"]["w"], cfg)  # (B,S,kk)
+
+    # ---- slot assignment: rank of each (token, choice) within its expert --
+    # flatten choices token-major so earlier tokens win capacity slots
+    fidx = idx.reshape(b, s * kk)  # (B, S*kk)
+    onehot = jax.nn.one_hot(fidx, e, dtype=jnp.int32)  # (B, S*kk, E)
+    ranks = jnp.cumsum(onehot, axis=1) - 1  # rank within expert
+    pos = jnp.take_along_axis(ranks, fidx[..., None], axis=-1)[..., 0]  # (B, S*kk)
+    keep = pos < cap
+    # scatter token index s into dispatch table (B, E, cap)
+    tok_of_choice = jnp.repeat(jnp.arange(s)[None, :], b, axis=0)
+    tok_of_choice = jnp.repeat(tok_of_choice[..., None], kk, axis=-1).reshape(b, s * kk)
+    flat_slot = fidx * cap + jnp.where(keep, pos, cap * e)  # dropped -> OOB
+    dispatch = jnp.full((b, e * cap + 1), s, jnp.int32)  # sentinel = s (pad row)
+    dispatch = dispatch.at[
+        jnp.arange(b)[:, None], flat_slot
+    ].set(tok_of_choice, mode="drop")
+    dispatch = dispatch[:, : e * cap].reshape(b, e, cap)
+
+    # ---- gather tokens -> (B, E, cap, D), pad row for sentinel ------------
+    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xpad[:, None], dispatch[..., None], axis=2
+    )  # (B, E, cap, D)
+    xe = constrain(xe, P(ax.dp, ep, None, None))
+
+    # ---- expert FFN (batched einsum over E) -------------------------------
+    act = jax.nn.gelu if cfg.act.startswith("gelu") else jax.nn.silu
+    h = act(jnp.einsum("becd,edf->becf", xe, p["wg"])) * jnp.einsum(
+        "becd,edf->becf", xe, p["wu"]
+    )
+    h = constrain(h, P(ax.dp, ep, None, ff))
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"])
+    ye = constrain(ye, P(ax.dp, ep, None, None))
+
+    # ---- combine: gather back each token's kk expert outputs --------------
+    gather_idx = jnp.where(keep, flat_slot, e * cap).reshape(b, s, kk)
+    yflat = jnp.concatenate(
+        [ye.reshape(b, e * cap, d), jnp.zeros((b, 1, d), ye.dtype)], axis=1
+    )
+    yk = jnp.take_along_axis(
+        yflat[:, :, None], gather_idx.reshape(b, s * kk)[..., None, None], axis=1
+    )  # -> (B, S*kk, 1, D)
+    yk = yk.reshape(b, s, kk, d)
+    gk = (gates * keep.reshape(b, s, kk)).astype(yk.dtype)
+    y = jnp.einsum("bskd,bsk->bsd", yk, gk)
+    return constrain(y, P(ax.dp, None, None)), aux
+
+
+def moe_ffn_noaux(x, p, cfg: ArchConfig, ax: MeshAxes):
+    y, _ = moe_ffn(x, p, cfg, ax)
+    return y

@@ -1,0 +1,228 @@
+"""Family registry: one uniform ModelApi per architecture family.
+
+    api = get_model(cfg)
+    loss              = api.loss(params, batch, cfg, ax)
+    logits, cache     = api.prefill(params, batch, cfg, ax, cache_len)
+    logits, cache     = api.decode(params, token, cache, pos, cfg, ax, plan)
+
+``batch`` is a dict: tokens/labels (+ patch_embed for vlm, src_embed for
+encdec, loss_mask optional). All ten assigned archs resolve here.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, mamba, moe, rglru, transformer as T
+from repro.models.shardings import MeshAxes, ServePlan
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    family: str
+    init: Callable  # (cfg, rng) -> params
+    specs: Callable  # (cfg, ax) -> pytree of PartitionSpec
+    loss: Callable  # (params, batch, cfg, ax) -> scalar
+    prefill: Callable  # (params, batch, cfg, ax, cache_len) -> (logits, cache)
+    decode: Callable  # (params, token, cache, pos, cfg, ax, plan) -> (logits, cache)
+    init_cache: Callable  # (cfg, batch, cache_len) -> cache
+    cache_shape: Callable  # (cfg, batch, cache_len) -> ShapeDtypeStruct tree
+    cache_specs: Callable  # (cfg, ax, batch, plan) -> pytree of PartitionSpec
+
+
+# -- dense / vlm --------------------------------------------------------------
+
+
+def _dense_prefill(params, batch, cfg, ax, cache_len):
+    return T.prefill(
+        params, batch["tokens"], cfg, ax, cache_len,
+        prefix_embed=batch.get("patch_embed"),
+    )
+
+
+DENSE = ModelApi(
+    family="dense",
+    init=T.init_lm,
+    specs=T.lm_specs,
+    loss=T.lm_loss,
+    prefill=_dense_prefill,
+    decode=T.decode_step,
+    init_cache=T.init_cache,
+    cache_shape=T.cache_shape,
+    cache_specs=T.cache_specs,
+)
+
+VLM = DENSE  # patch-embedding stub prefix is handled inside loss/prefill
+
+
+# -- moe ----------------------------------------------------------------------
+
+
+def _moe_init(cfg, rng):
+    import jax
+
+    ke, kl, kh = jax.random.split(rng, 3)
+    from repro.models import layers as L
+    from repro.models import stack
+
+    params = {
+        "embed": L.init_embed(ke, cfg),
+        "layers": stack.stacked_init(
+            functools.partial(
+                T.init_decoder_layer, cfg=cfg, ffn_init=moe.init_moe
+            ),
+            kl,
+            cfg.num_layers,
+        ),
+        "ln_f": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(kh, cfg.d_model, cfg.vocab_size, False)["w"]
+    return params
+
+
+def _moe_specs(cfg, ax):
+    from jax.sharding import PartitionSpec as P
+    from repro.models import stack
+
+    specs = {
+        "embed": T.embed_specs(cfg, ax),
+        "layers": stack.stacked_specs(
+            T.decoder_layer_specs(cfg, ax, ffn_specs=moe.moe_specs)
+        ),
+        "ln_f": T.norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P(ax.fsdp_if(cfg.d_model), ax.tp_if(cfg.vocab_size))
+    return specs
+
+
+def _moe_loss(params, batch, cfg, ax):
+    """Dense-LM wiring + per-layer load-balance aux threaded through the
+    scan carry (weight 0.01, Switch-style)."""
+    import jax
+    from repro.models import layers as L
+    from repro.models import stack
+    from repro.models.shardings import constrain
+    from jax.sharding import PartitionSpec as P
+
+    x = L.embed_tokens(params["embed"], batch["tokens"], ax)
+    s = x.shape[1]
+    x = constrain(x, T.res_spec(ax, s))
+    positions = jnp.arange(s)
+
+    def body(carry, lp):
+        h, aux = carry
+        h = h + L.attention_train(L.norm(h, lp["ln1"], cfg), lp["attn"], cfg, ax, positions)
+        h = constrain(h, T.res_spec(ax, s))
+        y, a = moe.moe_ffn(L.norm(h, lp["ln2"], cfg), lp["ffn"], cfg, ax)
+        h = constrain(h + y, T.res_spec(ax, s))
+        return (h, aux + a), None
+
+    ck = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(lambda c, lp: ck(c, lp), (x, jnp.zeros(())), params["layers"])
+    x = L.norm(x, params["ln_f"], cfg)
+    xent = T.chunked_xent(
+        x, T.unembed_weight(params, cfg), batch["labels"], cfg, ax, batch.get("loss_mask")
+    )
+    return xent + 0.01 * aux / cfg.num_layers
+
+
+def _moe_prefill(params, batch, cfg, ax, cache_len):
+    return T.prefill(
+        params, batch["tokens"], cfg, ax, cache_len, ffn_apply=moe.moe_ffn_noaux
+    )
+
+
+def _moe_decode(params, token, cache, pos, cfg, ax, plan):
+    return T.decode_step(
+        params, token, cache, pos, cfg, ax, plan, ffn_apply=moe.moe_ffn_noaux
+    )
+
+
+MOE = ModelApi(
+    family="moe",
+    init=_moe_init,
+    specs=_moe_specs,
+    loss=_moe_loss,
+    prefill=_moe_prefill,
+    decode=_moe_decode,
+    init_cache=T.init_cache,
+    cache_shape=T.cache_shape,
+    cache_specs=T.cache_specs,
+)
+
+
+# -- ssm / hybrid / encdec ----------------------------------------------------
+
+
+def _ssm_prefill(params, batch, cfg, ax, cache_len):
+    return mamba.prefill(params, batch["tokens"], cfg, ax, cache_len)
+
+
+SSM = ModelApi(
+    family="ssm",
+    init=mamba.init_lm,
+    specs=mamba.lm_specs,
+    loss=mamba.lm_loss,
+    prefill=_ssm_prefill,
+    decode=mamba.decode_step,
+    init_cache=mamba.init_cache,
+    cache_shape=mamba.cache_shape,
+    cache_specs=mamba.cache_specs,
+)
+
+
+def _hybrid_prefill(params, batch, cfg, ax, cache_len):
+    return rglru.prefill(params, batch["tokens"], cfg, ax, cache_len)
+
+
+HYBRID = ModelApi(
+    family="hybrid",
+    init=rglru.init_lm,
+    specs=rglru.lm_specs,
+    loss=rglru.lm_loss,
+    prefill=_hybrid_prefill,
+    decode=rglru.decode_step,
+    init_cache=rglru.init_cache,
+    cache_shape=rglru.cache_shape,
+    cache_specs=rglru.cache_specs,
+)
+
+
+def _encdec_prefill(params, batch, cfg, ax, cache_len):
+    return encdec.prefill(
+        params, batch["tokens"], cfg, ax, cache_len, src_embed=batch["src_embed"]
+    )
+
+
+ENCDEC = ModelApi(
+    family="encdec",
+    init=encdec.init_lm,
+    specs=encdec.lm_specs,
+    loss=encdec.lm_loss,
+    prefill=_encdec_prefill,
+    decode=encdec.decode_step,
+    init_cache=encdec.init_cache,
+    cache_shape=encdec.cache_shape,
+    cache_specs=encdec.cache_specs,
+)
+
+
+_FAMILIES = {
+    "dense": DENSE,
+    "vlm": VLM,
+    "moe": MOE,
+    "ssm": SSM,
+    "hybrid": HYBRID,
+    "encdec": ENCDEC,
+}
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    return _FAMILIES[cfg.family]

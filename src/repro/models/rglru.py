@@ -1,0 +1,442 @@
+"""Griffin-style hybrid blocks (recurrentgemma family): RG-LRU recurrent
+blocks interleaved 2:1 with local sliding-window MQA blocks
+[arXiv:2402.19427].
+
+Layer pattern handling: the 38-layer stack = 12 scanned copies of the
+(rec, rec, attn) *supergroup* + an unscanned (rec, rec) tail, so
+lax.scan still bounds compile time despite the heterogeneous stack.
+
+RG-LRU recurrence (diagonal, per-channel):
+    r_t = sigmoid(W_r x_t)         (block-diagonal gate, H blocks)
+    i_t = sigmoid(W_i x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+Diagonal -> chunked associative scan, state (B, W); decode is O(1).
+The sliding-window KV cache is O(window), which together with the O(1)
+LRU state is what makes long_500k native for this family.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models import transformer as T
+from repro.models.shardings import MeshAxes, constrain
+
+_C = 8.0  # RG-LRU temperature
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+
+def init_rglru(rng, cfg: ArchConfig, dtype=jnp.bfloat16):
+    w = cfg.lru_width
+    h = cfg.num_heads
+    wh = w // h
+    ks = jax.random.split(rng, 3)
+    scale = 1.0 / math.sqrt(wh)
+    # Lambda init so a ~ uniform(0.9, 0.999)^... (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "w_r": (jax.random.normal(ks[1], (h, wh, wh), jnp.float32) * scale).astype(dtype),
+        "w_i": (jax.random.normal(ks[2], (h, wh, wh), jnp.float32) * scale).astype(dtype),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+    }
+
+
+def rglru_specs(cfg: ArchConfig, ax: MeshAxes):
+    tp_h = ax.tp_if(cfg.num_heads)
+    return {
+        "w_r": P(tp_h, None, None),
+        "w_i": P(tp_h, None, None),
+        "b_r": P(None),
+        "b_i": P(None),
+        "lam": P(None),
+    }
+
+
+def _gates(x, p, cfg: ArchConfig):
+    """x: (B, S, W) -> (log_a (B,S,W) f32, gated input (B,S,W) f32)."""
+    b, s, w = x.shape
+    h = cfg.num_heads
+    xh = x.reshape(b, s, h, w // h)
+    r = L.einsum_f32("bshi,hij->bshj", xh, p["w_r"])
+    i = L.einsum_f32("bshi,hij->bshj", xh, p["w_i"])
+    r = jax.nn.sigmoid(r.reshape(b, s, w) + p["b_r"])
+    i = jax.nn.sigmoid(i.reshape(b, s, w) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    gated = i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def rglru_scan(x, p, cfg: ArchConfig, h0=None):
+    """x: (B, S, W); h0: (B, W) f32 carry. Returns (y (B,S,W), h_last)."""
+    b, s, w = x.shape
+    log_a, gated = _gates(x, p, cfg)
+    a = jnp.exp(log_a)
+    bt = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+
+    chunk = L.fit_chunk(s, cfg.scan_chunk)
+    nch = s // chunk
+    a_c = a.reshape(b, nch, chunk, w).transpose(1, 0, 2, 3)
+    b_c = bt.reshape(b, nch, chunk, w).transpose(1, 0, 2, 3)
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, ab):
+        ac, bc = ab
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = b_cum + a_cum * h[:, None]
+        return hs[:, -1], hs.astype(x.dtype)
+
+    h_last, ys = jax.lax.scan(body, h0, (a_c, b_c))
+    return ys.transpose(1, 0, 2, 3).reshape(b, s, w), h_last
+
+
+def rglru_step(x1, p, cfg: ArchConfig, h):
+    """One-token recurrence. x1: (B, 1, W); h: (B, W) f32."""
+    log_a, gated = _gates(x1, p, cfg)
+    a = jnp.exp(log_a[:, 0])
+    bt = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated[:, 0]
+    h = a * h + bt
+    return h.astype(x1.dtype)[:, None], h
+
+
+# ---------------------------------------------------------------------------
+# recurrent block (conv + RG-LRU + gate)
+# ---------------------------------------------------------------------------
+
+
+def init_rec_block(rng, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(rng, 5)
+    sd = 1.0 / math.sqrt(d)
+    sw = 1.0 / math.sqrt(w)
+    return {
+        "lin_x": L.init_dense(ks[0], d, w, False, dtype),
+        "lin_y": L.init_dense(ks[1], d, w, False, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.d_conv, w), jnp.float32) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lru": init_rglru(ks[3], cfg, dtype),
+        "lin_out": L.init_dense(ks[4], w, d, False, dtype),
+    }
+
+
+def rec_block_specs(cfg: ArchConfig, ax: MeshAxes):
+    tp = ax.tp_if(cfg.lru_width)
+    fs = ax.fsdp_if(cfg.d_model)
+    return {
+        "lin_x": {"w": P(fs, tp)},
+        "lin_y": {"w": P(fs, tp)},
+        "conv_w": P(None, tp),
+        "conv_b": P(tp),
+        "lru": rglru_specs(cfg, ax),
+        "lin_out": {"w": P(tp, fs)},
+    }
+
+
+def rec_mix(x, p, cfg: ArchConfig, ax: MeshAxes, state=None):
+    """Griffin recurrent temporal-mix. state: None or dict(conv, lru)."""
+    from repro.models.mamba import _causal_conv
+
+    tp = ax.tp_if(cfg.lru_width)
+    xb = L.dense(x, p["lin_x"]["w"])
+    yb = jax.nn.gelu(L.dense(x, p["lin_y"]["w"]))
+    xb = constrain(xb, P(ax.dp, None, tp))
+    conv0 = state["conv"] if state else None
+    xb, conv_state = _causal_conv(xb, p["conv_w"], p["conv_b"], conv0)
+    if x.shape[1] == 1 and state is not None:
+        lru_out, h_last = rglru_step(xb, p["lru"], cfg, state["lru"])
+    else:
+        h0 = state["lru"] if state else None
+        lru_out, h_last = rglru_scan(xb, p["lru"], cfg, h0)
+    out = L.dense(lru_out * yb, p["lin_out"]["w"])
+    return out, {"conv": conv_state, "lru": h_last}
+
+
+# ---------------------------------------------------------------------------
+# supergroup wiring
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ArchConfig, kind: str):
+    k1, k2 = jax.random.split(rng)
+    mix = init_rec_block(k1, cfg) if kind == "rec" else L.init_attn(k1, cfg)
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "mix": mix,
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "ffn": L.init_mlp(k2, cfg),
+    }
+
+
+def block_specs(cfg: ArchConfig, ax: MeshAxes, kind: str):
+    mix = rec_block_specs(cfg, ax) if kind == "rec" else T.attn_specs(cfg, ax)
+    return {
+        "ln1": T.norm_specs(cfg),
+        "mix": mix,
+        "ln2": T.norm_specs(cfg),
+        "ffn": T.mlp_specs(cfg, ax),
+    }
+
+
+def _group_layout(cfg: ArchConfig) -> tuple[int, tuple[str, ...]]:
+    pat = cfg.block_pattern
+    groups = cfg.num_layers // len(pat)
+    tail = cfg.num_layers % len(pat)
+    return groups, pat[:tail]
+
+
+def init_group(rng, cfg: ArchConfig):
+    pat = cfg.block_pattern
+    ks = jax.random.split(rng, len(pat))
+    return {f"b{i}": init_block(ks[i], cfg, kind) for i, kind in enumerate(pat)}
+
+
+def group_specs(cfg: ArchConfig, ax: MeshAxes):
+    return {
+        f"b{i}": block_specs(cfg, ax, kind) for i, kind in enumerate(cfg.block_pattern)
+    }
+
+
+def init_lm(cfg: ArchConfig, rng) -> dict:
+    ke, kg, kt = jax.random.split(rng, 3)
+    groups, tail = _group_layout(cfg)
+    params = {
+        "embed": L.init_embed(ke, cfg),
+        "groups": stack.stacked_init(
+            functools.partial(init_group, cfg=cfg), kg, groups
+        ),
+        "tail": [
+            init_block(k, cfg, kind)
+            for k, kind in zip(jax.random.split(kt, max(len(tail), 1)), tail)
+        ],
+        "ln_f": L.init_norm(cfg, cfg.d_model),
+    }
+    return params
+
+
+def lm_specs(cfg: ArchConfig, ax: MeshAxes) -> dict:
+    _, tail = _group_layout(cfg)
+    return {
+        "embed": P(ax.tp_if(cfg.vocab_size), ax.fsdp_if(cfg.d_model)),
+        "groups": stack.stacked_specs(group_specs(cfg, ax)),
+        "tail": [block_specs(cfg, ax, kind) for kind in tail],
+        "ln_f": T.norm_specs(cfg),
+    }
+
+
+def apply_block(x, p, kind: str, cfg: ArchConfig, ax: MeshAxes, positions):
+    s = x.shape[1]
+    xn = L.norm(x, p["ln1"], cfg)
+    if kind == "rec":
+        mix, _ = rec_mix(xn, p["mix"], cfg, ax)
+    else:
+        mix = L.attention_train(xn, p["mix"], cfg, ax, positions)
+    x = x + mix
+    x = constrain(x, T.res_spec(ax, s))
+    x = x + L.mlp(L.norm(x, p["ln2"], cfg), p["ffn"], cfg, ax)
+    return constrain(x, T.res_spec(ax, s))
+
+
+def lm_loss(params, batch, cfg: ArchConfig, ax: MeshAxes):
+    x = L.embed_tokens(params["embed"], batch["tokens"], ax)
+    x = x * math.sqrt(cfg.d_model)  # gemma-style embedding scale
+    s = x.shape[1]
+    x = constrain(x, T.res_spec(ax, s))
+    positions = jnp.arange(s)
+    pat = cfg.block_pattern
+
+    def group_body(h, gp):
+        for i, kind in enumerate(pat):
+            h = apply_block(h, gp[f"b{i}"], kind, cfg, ax, positions)
+        return h
+
+    x = stack.scan_layers(group_body, x, params["groups"])
+    _, tail = _group_layout(cfg)
+    for p, kind in zip(params["tail"], tail):
+        x = apply_block(x, p, kind, cfg, ax, positions)
+    x = L.norm(x, params["ln_f"], cfg)
+    return T.chunked_xent(x, params["embed"], batch["labels"], cfg, ax,
+                          batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, window: int, shape_only=False):
+    mk = jax.ShapeDtypeStruct if shape_only else jnp.zeros
+    if kind == "rec":
+        return {
+            "conv": mk((batch, cfg.d_conv - 1, cfg.lru_width), jnp.bfloat16),
+            "lru": mk((batch, cfg.lru_width), jnp.float32),
+        }
+    return {
+        "k": mk((batch, window, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": mk((batch, window, cfg.num_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }
+
+
+def _cache_window(cfg: ArchConfig, cache_len: int) -> int:
+    # local attention only ever needs the window, regardless of context len
+    return min(cfg.sliding_window or cache_len, cache_len)
+
+
+def _stack_tree(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, shape_only=False):
+    groups, tail = _group_layout(cfg)
+    w = _cache_window(cfg, cache_len)
+    gcache = {
+        f"b{i}": _block_cache(cfg, kind, batch, w, shape_only)
+        for i, kind in enumerate(cfg.block_pattern)
+    }
+    if shape_only:
+        gstack = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((groups, *s.shape), s.dtype), gcache
+        )
+    else:
+        gstack = jax.tree.map(
+            lambda s: jnp.zeros((groups, *s.shape), s.dtype), gcache
+        )
+    return {
+        "groups": gstack,
+        "tail": [_block_cache(cfg, kind, batch, w, shape_only) for kind in tail],
+    }
+
+
+def cache_shape(cfg: ArchConfig, batch: int, cache_len: int):
+    return init_cache(cfg, batch, cache_len, shape_only=True)
+
+
+def _block_cache_specs(cfg: ArchConfig, ax: MeshAxes, kind: str, plan):
+    b = plan.batch_axes or None
+    if kind == "rec":
+        tp = ax.tp_if(cfg.lru_width)
+        return {"conv": P(b, None, tp), "lru": P(b, tp)}
+    # window cache is small; shard batch only (window rarely divides tp)
+    return {"k": P(b, None, None, None), "v": P(b, None, None, None)}
+
+
+def cache_specs(cfg: ArchConfig, ax: MeshAxes, batch: int, plan) -> dict:
+    _, tail = _group_layout(cfg)
+    g = {
+        f"b{i}": _block_cache_specs(cfg, ax, kind, plan)
+        for i, kind in enumerate(cfg.block_pattern)
+    }
+    g = jax.tree.map(
+        lambda s: P(None, *s), g, is_leaf=lambda x: isinstance(x, P)
+    )
+    return {
+        "groups": g,
+        "tail": [_block_cache_specs(cfg, ax, kind, plan) for kind in tail],
+    }
+
+
+def _decode_block(x1, p, kind: str, cfg: ArchConfig, ax: MeshAxes, pos, lc, plan):
+    xn = L.norm(x1, p["ln1"], cfg)
+    if kind == "rec":
+        mix, st = rec_mix(xn, p["mix"], cfg, ax, state=lc)
+    else:
+        from repro.models.shardings import ServePlan
+
+        wplan = ServePlan(batch_axes=plan.batch_axes)  # window cache: no seq shard
+        mix, nk, nv = L.attention_decode_general(
+            xn, lc["k"], lc["v"], p["mix"], cfg, ax, pos, wplan
+        )
+        st = {"k": nk, "v": nv}
+    x1 = x1 + mix
+    x1 = x1 + L.mlp(L.norm(x1, p["ln2"], cfg), p["ffn"], cfg, ax)
+    return x1, st
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig, ax: MeshAxes, plan):
+    x = L.embed_tokens(params["embed"], token, ax) * math.sqrt(cfg.d_model)
+    pat = cfg.block_pattern
+
+    def group_body(h, gp, gc):
+        ncache = {}
+        for i, kind in enumerate(pat):
+            h, ncache[f"b{i}"] = _decode_block(h, gp[f"b{i}"], kind, cfg, ax, pos,
+                                               gc[f"b{i}"], plan)
+        return h, ncache
+
+    x, gcache = stack.scan_layers_with_cache(group_body, x, params["groups"],
+                                             cache["groups"])
+    _, tail = _group_layout(cfg)
+    tcache = []
+    for p, kind, tc in zip(params["tail"], tail, cache["tail"]):
+        x, st = _decode_block(x, p, kind, cfg, ax, pos, tc, plan)
+        tcache.append(st)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x, params["embed"], ax, cfg.vocab_size)
+    return logits[:, 0], {"groups": gcache, "tail": tcache}
+
+
+def prefill(params, tokens, cfg: ArchConfig, ax: MeshAxes, cache_len: int):
+    """Prompt pass. Fills LRU/conv states + window KV caches; returns
+    (last logits, cache). Window cache holds the trailing ``window``
+    positions of the prompt (ring layout: slot = pos % window)."""
+    x = L.embed_tokens(params["embed"], tokens, ax) * math.sqrt(cfg.d_model)
+    b, s, _ = x.shape
+    x = constrain(x, T.res_spec(ax, s))
+    positions = jnp.arange(s)
+    w = _cache_window(cfg, cache_len)
+    pat = cfg.block_pattern
+
+    def prefill_block(h, p, kind):
+        xn = L.norm(h, p["ln1"], cfg)
+        if kind == "rec":
+            mix, st = rec_mix(xn, p["mix"], cfg, ax)
+        else:
+            q, k, v = L.qkv_proj(xn, p["mix"], cfg, ax, positions)
+            ke, ve = L.expand_kv(k, cfg), L.expand_kv(v, cfg)
+            o = L.attention_core_train(q, ke, ve, cfg, ax)
+            mix = L.dense(o, p["mix"]["wo"]["w"], p["mix"]["wo"].get("b"))
+            # ring-layout trailing window: roll so slot = pos % w
+            kw, vw = k[:, -w:], v[:, -w:]
+            shift = jnp.asarray(s % w, jnp.int32)
+            kw = jnp.roll(kw, shift, axis=1)
+            vw = jnp.roll(vw, shift, axis=1)
+            st = {"k": kw.astype(jnp.bfloat16), "v": vw.astype(jnp.bfloat16)}
+        h = h + mix
+        h = h + L.mlp(L.norm(h, p["ln2"], cfg), p["ffn"], cfg, ax)
+        return h, st
+
+    def group_body(h, gp):
+        sts = {}
+        for i, kind in enumerate(pat):
+            h, sts[f"b{i}"] = prefill_block(h, gp[f"b{i}"], kind)
+        return h, sts
+
+    x, gcache = jax.lax.scan(lambda c, gp: group_body(c, gp), x, params["groups"])
+    _, tail = _group_layout(cfg)
+    tcache = []
+    for p, kind in zip(params["tail"], tail):
+        x, st = prefill_block(x, p, kind)
+        tcache.append(st)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x[:, -1:], params["embed"], ax, cfg.vocab_size)
+    return logits[:, 0], {"groups": gcache, "tail": tcache}

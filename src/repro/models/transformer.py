@@ -1,0 +1,280 @@
+"""Decoder-only transformer LM — the `dense` family (mistral-large,
+command-r, starcoder2, qwen2) and, with a patch-embedding stub prefix,
+the `vlm` family (pixtral).
+
+Pure-function / params-dict style (see layers.py). Layer stacks are
+scanned (stack.py). Three entry points per model:
+  * ``loss``    — train forward + chunked cross-entropy (logits are never
+                  materialized beyond (B, chunk, V), sharded on tp).
+  * ``prefill`` — fills a KV cache, returns last-position logits.
+  * ``decode``  — one-token step against the cache (plain / seq-sharded).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import stack
+from repro.models.shardings import MeshAxes, constrain
+
+
+# ---------------------------------------------------------------------------
+# param init & sharding specs
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_layer(rng, cfg: ArchConfig, ffn_init=None):
+    k1, k2 = jax.random.split(rng)
+    ffn_init = ffn_init or L.init_mlp
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attn(k1, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "ffn": ffn_init(k2, cfg),
+    }
+
+
+def norm_specs(cfg: ArchConfig):
+    s = {"scale": P(None)}
+    if cfg.norm == "layernorm":
+        s["bias"] = P(None)
+    return s
+
+
+def dense_specs(d_in_spec, d_out_spec, bias: bool):
+    s = {"w": P(d_in_spec, d_out_spec)}
+    if bias:
+        s["b"] = P(d_out_spec)
+    return s
+
+
+def attn_specs(cfg: ArchConfig, ax: MeshAxes):
+    """Column-parallel qkv (out dim on tp), row-parallel out-proj, fsdp on
+    the other dim. KV projections replicate over tp when kv_dim % tp != 0
+    (GQA with few KV heads) — see DESIGN.md §5."""
+    tp_q = ax.tp_if(cfg.q_dim)
+    tp_kv = ax.tp_if(cfg.kv_dim)
+    fs = ax.fsdp_if(cfg.d_model)
+    return {
+        "wq": dense_specs(fs, tp_q, cfg.qkv_bias),
+        "wk": dense_specs(fs, tp_kv, cfg.qkv_bias),
+        "wv": dense_specs(fs, tp_kv, cfg.qkv_bias),
+        "wo": dense_specs(tp_q, fs, False),
+    }
+
+
+def mlp_specs(cfg: ArchConfig, ax: MeshAxes, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    tp_f = ax.tp_if(d_ff)
+    fs = ax.fsdp_if(cfg.d_model)
+    if cfg.act == "gelu":
+        return {
+            "wi": dense_specs(fs, tp_f, True),
+            "wd": dense_specs(tp_f, fs, True),
+        }
+    return {
+        "wg": dense_specs(fs, tp_f, False),
+        "wu": dense_specs(fs, tp_f, False),
+        "wd": dense_specs(tp_f, fs, False),
+    }
+
+
+def decoder_layer_specs(cfg: ArchConfig, ax: MeshAxes, ffn_specs=None):
+    return {
+        "ln1": norm_specs(cfg),
+        "attn": attn_specs(cfg, ax),
+        "ln2": norm_specs(cfg),
+        "ffn": (ffn_specs or mlp_specs)(cfg, ax),
+    }
+
+
+def embed_specs(cfg: ArchConfig, ax: MeshAxes):
+    return P(ax.tp_if(cfg.vocab_size), ax.fsdp_if(cfg.d_model))
+
+
+def init_lm(cfg: ArchConfig, rng) -> dict:
+    ke, kl, kh = jax.random.split(rng, 3)
+    params = {
+        "embed": L.init_embed(ke, cfg),
+        "layers": stack.stacked_init(
+            functools.partial(init_decoder_layer, cfg=cfg), kl, cfg.num_layers
+        ),
+        "ln_f": L.init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.init_dense(kh, cfg.d_model, cfg.vocab_size, False)["w"]
+    return params
+
+
+def lm_specs(cfg: ArchConfig, ax: MeshAxes) -> dict:
+    specs = {
+        "embed": embed_specs(cfg, ax),
+        "layers": stack.stacked_specs(decoder_layer_specs(cfg, ax)),
+        "ln_f": norm_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P(ax.fsdp_if(cfg.d_model), ax.tp_if(cfg.vocab_size))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def res_spec(ax: MeshAxes, s: int) -> P:
+    """Residual-stream spec: batch on dp, sequence on tp (Megatron-SP)
+    whenever the sequence divides the tp axis."""
+    seq = ax.tp if (ax.tp and s % ax.tp_size == 0 and s > 1) else None
+    return P(ax.dp, seq, None)
+
+
+def apply_decoder_layer(x, p, cfg: ArchConfig, ax: MeshAxes, positions=None, ffn_apply=None):
+    s = x.shape[1]
+    x = x + L.attention_train(L.norm(x, p["ln1"], cfg), p["attn"], cfg, ax, positions)
+    x = constrain(x, res_spec(ax, s))
+    x = x + (ffn_apply or L.mlp)(L.norm(x, p["ln2"], cfg), p["ffn"], cfg, ax)
+    return constrain(x, res_spec(ax, s))
+
+
+def lm_hidden(params, cfg: ArchConfig, ax: MeshAxes, tokens, prefix_embed=None, ffn_apply=None):
+    """Token (+ optional stub prefix) embeddings -> final hidden states."""
+    x = L.embed_tokens(params["embed"], tokens, ax)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    x = constrain(x, res_spec(ax, s))
+    positions = jnp.arange(s)
+
+    def body(h, lp):
+        return apply_decoder_layer(h, lp, cfg, ax, positions, ffn_apply)
+
+    x = stack.scan_layers(body, x, params["layers"], block=cfg.remat_block)
+    return L.norm(x, params["ln_f"], cfg)
+
+
+def unembed_weight(params, cfg: ArchConfig):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def chunked_xent(x, w, labels, cfg: ArchConfig, ax: MeshAxes, loss_mask=None, chunk=256):
+    """Cross-entropy without materializing (B, S, V): scan over S chunks;
+    each chunk's logits are (B, chunk, V) with V sharded on tp."""
+    b, s, d = x.shape
+    from repro.models.layers import fit_chunk
+    chunk = fit_chunk(s, chunk)
+    nch = s // chunk
+    xs = x.reshape(b, nch, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nch, chunk).transpose(1, 0, 2)
+    if loss_mask is None:
+        ms = jnp.ones((nch, b, chunk), jnp.float32)
+    else:
+        ms = loss_mask.reshape(b, nch, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(acc, inp):
+        xc, lc, mc = inp
+        logits = L.unembed(xc, w, ax, cfg.vocab_size).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        tot, cnt = acc
+        return (tot + jnp.sum((lse - ll) * mc), cnt + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg: ArchConfig, ax: MeshAxes, ffn_apply=None):
+    prefix = batch.get("patch_embed")
+    x = lm_hidden(params, cfg, ax, batch["tokens"], prefix_embed=prefix, ffn_apply=ffn_apply)
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:]
+    return chunked_xent(
+        x, unembed_weight(params, cfg), batch["labels"], cfg, ax, batch.get("loss_mask")
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_shape(cfg: ArchConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+def cache_specs(cfg: ArchConfig, ax: MeshAxes, batch: int, plan) -> dict:
+    spec = P(plan.batch_axes, plan.seq_axes if plan.seq_axes else None,
+             plan.kv_axes if plan.kv_axes else None, None)
+    spec = P(None, *spec)  # layer dim
+    return {"k": spec, "v": spec}
+
+
+def prefill(params, tokens, cfg: ArchConfig, ax: MeshAxes, cache_len: int,
+            prefix_embed=None, ffn_apply=None):
+    """Full-sequence forward that also fills the KV cache. Returns
+    (last-position logits (B, V), cache)."""
+    x = L.embed_tokens(params["embed"], tokens, ax)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    x = constrain(x, res_spec(ax, s))
+    positions = jnp.arange(s)
+
+    def body(h, lp):
+        xn = L.norm(h, lp["ln1"], cfg)
+        q, k, v = L.qkv_proj(xn, lp["attn"], cfg, ax, positions)
+        ke, ve = L.expand_kv(k, cfg), L.expand_kv(v, cfg)
+        o = L.attention_core_train(q, ke, ve, cfg, ax)
+        h = h + L.dense(o, lp["attn"]["wo"]["w"], lp["attn"]["wo"].get("b"))
+        h = constrain(h, res_spec(ax, s))
+        h = h + (ffn_apply or L.mlp)(L.norm(h, lp["ln2"], cfg), lp["ffn"], cfg, ax)
+        return constrain(h, res_spec(ax, s)), (k, v)
+
+    def step(carry, lp):
+        h, kv = body(carry, lp)
+        return h, kv
+
+    x, (ks, vs) = jax.lax.scan(step, x, params["layers"])
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x[:, -1:], unembed_weight(params, cfg), ax, cfg.vocab_size)
+    pad = cache_len - s
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits[:, 0], {"k": ks.astype(jnp.bfloat16), "v": vs.astype(jnp.bfloat16)}
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig, ax: MeshAxes, plan,
+                ffn_apply=None):
+    """One-token decode. token: (B, 1) int32; pos: scalar int32 (position
+    being written). Returns (logits (B, V), new cache)."""
+    x = L.embed_tokens(params["embed"], token, ax)
+
+    def body(h, lp, lc):
+        xn = L.norm(h, lp["ln1"], cfg)
+        o, nk, nv = L.attention_decode_general(
+            xn, lc["k"], lc["v"], lp["attn"], cfg, ax, pos, plan
+        )
+        h = h + o
+        h = h + (ffn_apply or L.mlp)(L.norm(h, lp["ln2"], cfg), lp["ffn"], cfg, ax)
+        return h, {"k": nk, "v": nv}
+
+    x, new_cache = stack.scan_layers_with_cache(body, x, params["layers"], cache)
+    x = L.norm(x, params["ln_f"], cfg)
+    logits = L.unembed(x, unembed_weight(params, cfg), ax, cfg.vocab_size)
+    return logits[:, 0], new_cache

@@ -1,0 +1,2 @@
+from repro.serve.kvcache import SlotManager, Request, plan_for  # noqa: F401
+from repro.serve.serve_step import make_decode_step, make_prefill_step  # noqa: F401

@@ -1,0 +1,46 @@
+"""jit-able serving steps (prefill + single-token decode) with sharding
+plumbing, used by launch/serve.py, launch/dryrun.py (decode cells) and
+the serving example.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import shapes_for_cell
+from repro.models.registry import ModelApi
+from repro.models.shardings import MeshAxes, ServePlan
+
+
+def make_prefill_step(cfg: ArchConfig, api: ModelApi, ax: MeshAxes, cache_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, cfg, ax, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, api: ModelApi, ax: MeshAxes, plan: ServePlan) -> Callable:
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = api.decode(params, token, cache, pos, cfg, ax, plan)
+        return logits, new_cache
+
+    return decode_step
+
+
+def decode_input_shapes(cfg: ArchConfig, batch: int, cache_len: int, api: ModelApi):
+    """ShapeDtypeStructs for the decode step: (cache, token, pos)."""
+    return (
+        api.cache_shape(cfg, batch, cache_len),
+        jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def greedy_sample(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]

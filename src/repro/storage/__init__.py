@@ -1,0 +1,15 @@
+from repro.storage.blockstore import BlockKey, BlockStore, PlacementError
+from repro.storage.netmodel import ClusterProfile, NetSimulator, Transfer
+from repro.storage.repair import BlockFixer, RepairReport, UnrecoverableError
+
+__all__ = [
+    "BlockKey",
+    "BlockStore",
+    "PlacementError",
+    "ClusterProfile",
+    "NetSimulator",
+    "Transfer",
+    "BlockFixer",
+    "RepairReport",
+    "UnrecoverableError",
+]

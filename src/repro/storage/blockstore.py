@@ -1,0 +1,131 @@
+"""Simulated distributed block store (the HDFS analogue).
+
+Blocks are addressed by (group_id, row, col) — a cell of a CORE matrix
+(for plain RS groups, row is always 0). Placement is anti-colocating like
+HDFS-RAID's RaidNode policy: all blocks of a group land on distinct
+nodes, so a node failure costs each group at most one block — the failure
+model under which the paper's per-column/-row analysis holds.
+
+Data lives in host numpy (this is the "disk"); codec math runs in JAX.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+BlockKey = tuple[str, int, int]  # (group_id, row, col)
+
+
+class PlacementError(RuntimeError):
+    pass
+
+
+@dataclass
+class BlockStore:
+    num_nodes: int
+    blocks: dict[BlockKey, np.ndarray] = field(default_factory=dict)
+    placement: dict[BlockKey, int] = field(default_factory=dict)
+    failed_nodes: set[int] = field(default_factory=set)
+    _group_counter: int = 0
+
+    # -- placement -----------------------------------------------------------
+    def _place_group(self, group_id: str, rows: int, cols: int) -> None:
+        """Anti-colocated placement of a (rows x cols) group.
+
+        All-distinct when the cluster is big enough; otherwise a
+        latin-square-style layout — node(r,c) = (off + c + K*r) mod N —
+        guaranteeing no two blocks of the same row OR column share a
+        node (one node failure => at most one failure per stripe and
+        per vertical group), which is the paper's placement requirement
+        for its 20-node clusters."""
+        need = rows * cols
+        alive = [n for n in range(self.num_nodes) if n not in self.failed_nodes]
+        offset = (hash(group_id) ^ self._group_counter) % len(alive)
+        self._group_counter += 1
+        if need <= len(alive):
+            chosen = [alive[(offset + i) % len(alive)] for i in range(need)]
+            i = 0
+            for r in range(rows):
+                for c in range(cols):
+                    self.placement[(group_id, r, c)] = chosen[i]
+                    i += 1
+            return
+        n = len(alive)
+        if max(rows, cols) > n:
+            raise PlacementError(
+                f"group {group_id} needs >= {max(rows, cols)} nodes for "
+                f"row/column anti-colocation, {n} alive"
+            )
+        k_step = next(
+            (k for k in range(1, n) if all((k * d) % n for d in range(1, rows))),
+            None,
+        )
+        if k_step is None:
+            raise PlacementError(f"no anti-colocating stride for {rows}x{cols} on {n}")
+        for r in range(rows):
+            for c in range(cols):
+                self.placement[(group_id, r, c)] = alive[(offset + c + k_step * r) % n]
+
+    # -- block API ------------------------------------------------------------
+    def put_group(self, group_id: str, matrix: np.ndarray) -> None:
+        """Store a full (rows, cols, q) group."""
+        rows, cols = matrix.shape[:2]
+        self._place_group(group_id, rows, cols)
+        for r in range(rows):
+            for c in range(cols):
+                self.blocks[(group_id, r, c)] = np.asarray(matrix[r, c])
+
+    def put_block(self, key: BlockKey, data: np.ndarray, node: int | None = None) -> None:
+        cur = self.placement.get(key)
+        if node is not None:
+            self.placement[key] = node
+        elif cur is None or cur in self.failed_nodes:
+            # (re-)place on a fresh alive node not already used by the group
+            alive = [n for n in range(self.num_nodes) if n not in self.failed_nodes]
+            used = {
+                self.placement[k]
+                for k in self.placement
+                if k[0] == key[0] and self.available(k)
+            }
+            free = [n for n in alive if n not in used]
+            self.placement[key] = free[0] if free else alive[0]
+        self.blocks[key] = np.asarray(data)
+
+    def node_of(self, key: BlockKey) -> int:
+        return self.placement[key]
+
+    def available(self, key: BlockKey) -> bool:
+        return (
+            key in self.blocks
+            and self.placement.get(key) is not None
+            and self.placement[key] not in self.failed_nodes
+        )
+
+    def get(self, key: BlockKey) -> np.ndarray:
+        if not self.available(key):
+            raise KeyError(f"block {key} unavailable (node failed or missing)")
+        return self.blocks[key]
+
+    # -- failures --------------------------------------------------------------
+    def fail_nodes(self, nodes: set[int] | list[int]) -> None:
+        self.failed_nodes.update(int(n) for n in nodes)
+
+    def heal_node(self, node: int) -> None:
+        self.failed_nodes.discard(int(node))
+
+    def drop_block(self, key: BlockKey) -> None:
+        """Targeted single-block corruption (for enforced failure patterns):
+        reassigns the block to a tombstone 'failed' placement."""
+        self.blocks.pop(key, None)
+
+    def failure_matrix(self, group_id: str, rows: int, cols: int) -> np.ndarray:
+        fm = np.zeros((rows, cols), dtype=bool)
+        for r in range(rows):
+            for c in range(cols):
+                fm[r, c] = not self.available((group_id, r, c))
+        return fm
+
+    def alive_nodes(self) -> list[int]:
+        return [n for n in range(self.num_nodes) if n not in self.failed_nodes]

@@ -1,0 +1,73 @@
+"""Network cost model for the simulated distributed block store.
+
+Mirrors the paper's §5.2 model: congestion-free fabric, per-node
+bandwidth caps; delays arise when a single node sends/receives multiple
+blocks. Two cluster profiles from §8 are provided:
+
+  * network-critical     — 12 MB/s links (the university thin-client rig)
+  * computation-critical — 250 MB/s links (EC2 m1.small)
+
+Compute costs are *measured* (the codec math runs for real on this host);
+network time is *simulated* from byte counts and the profile, since this
+container has no real cluster fabric.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ClusterProfile:
+    name: str
+    node_bandwidth: float  # bytes/sec per node (send and receive)
+    compute_scale: float  # multiplier on measured compute time
+
+    @classmethod
+    def network_critical(cls) -> "ClusterProfile":
+        return cls(name="network-critical", node_bandwidth=12e6, compute_scale=1.0)
+
+    @classmethod
+    def computation_critical(cls) -> "ClusterProfile":
+        # EC2 m1.small: fat links, weak CPU (paper: ~1.2GHz 2007 Xeon).
+        return cls(name="computation-critical", node_bandwidth=250e6, compute_scale=8.0)
+
+
+@dataclass
+class Transfer:
+    src_node: int
+    dst_node: int
+    nbytes: int
+    not_before: float = 0.0  # dependency: source block exists at this time
+
+
+@dataclass
+class NetSimulator:
+    """Event-ordered per-node bandwidth simulator.
+
+    Each node has unit-bandwidth send and receive ports; a transfer
+    occupies both for nbytes / bandwidth seconds, starting no earlier
+    than its dependency time and when both ports are free.
+    """
+
+    profile: ClusterProfile
+    send_free: dict[int, float] = field(default_factory=dict)
+    recv_free: dict[int, float] = field(default_factory=dict)
+    total_bytes: int = 0
+    makespan: float = 0.0
+
+    def transfer(self, t: Transfer) -> float:
+        """Schedule a transfer; returns its completion time (seconds)."""
+        bw = self.profile.node_bandwidth
+        start = max(
+            t.not_before,
+            self.send_free.get(t.src_node, 0.0),
+            self.recv_free.get(t.dst_node, 0.0),
+        )
+        dur = t.nbytes / bw
+        end = start + dur
+        self.send_free[t.src_node] = end
+        self.recv_free[t.dst_node] = end
+        self.total_bytes += t.nbytes
+        self.makespan = max(self.makespan, end)
+        return end

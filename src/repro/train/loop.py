@@ -1,0 +1,140 @@
+"""Training-loop driver: pipeline -> jitted step -> CORE checkpointing,
+with restart-from-latest, failure injection hooks and per-step telemetry.
+
+This is the single-process engine that the launcher (launch/train.py)
+and the end-to-end example (examples/train_tiny_lm.py) drive; multi-host
+orchestration plugs in through the mesh (the step function itself is
+mesh-agnostic — all distribution is in the shardings).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.core_ckpt import CoreCheckpointer
+from repro.configs.base import ArchConfig
+from repro.core.product_code import CoreCode
+from repro.data.pipeline import SyntheticPipeline, batch_specs
+from repro.models.registry import ModelApi, get_model
+from repro.models.shardings import SINGLE, MeshAxes, axes_for_mesh
+from repro.storage.blockstore import BlockStore
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+from repro.train.elastic import HostMonitor
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    seq_len: int = 128
+    global_batch: int = 8
+    seed: int = 0
+    num_nodes: int = 20  # simulated storage nodes backing checkpoints
+
+
+@dataclass
+class Trainer:
+    cfg: ArchConfig
+    lc: LoopConfig
+    oc: opt.OptConfig = field(default_factory=opt.OptConfig)
+    mesh: Any = None
+
+    def __post_init__(self):
+        self.api = get_model(self.cfg)
+        self.ax = axes_for_mesh(self.mesh) if self.mesh else SINGLE
+        self.pipeline = SyntheticPipeline(
+            self.cfg, self.lc.seq_len, self.lc.global_batch, self.lc.seed
+        )
+        code = CoreCode(self.cfg.core_code.n, self.cfg.core_code.k, self.cfg.core_code.t)
+        self.store = BlockStore(num_nodes=self.lc.num_nodes)
+        self.ckpt = CoreCheckpointer(self.store, code)
+        self.monitor = HostMonitor()
+        self._build_step()
+        self.metrics_log: list[dict] = []
+
+    def _build_step(self):
+        step_fn = ts.make_train_step(self.cfg, self.api, self.ax, self.oc)
+        if self.mesh is not None:
+            is_p = lambda x: isinstance(x, jax.sharding.PartitionSpec)
+            named = lambda tree: jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(self.mesh, s), tree, is_leaf=is_p
+            )
+            sspecs = ts.state_specs(self.cfg, self.api, self.ax, self.oc)
+            bspecs = batch_specs(self.cfg, self.ax)
+            self._state_shardings = named(sspecs)
+            self.step_fn = jax.jit(
+                step_fn,
+                in_shardings=(self._state_shardings, named(bspecs)),
+                donate_argnums=(0,),
+            )
+        else:
+            self._state_shardings = None
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    def place_state(self, state: "ts.TrainState") -> "ts.TrainState":
+        """Shard a (host/replicated) train state onto the mesh layout."""
+        if self._state_shardings is None:
+            return state
+        flat_s, _ = jax.tree.flatten(
+            self._state_shardings,
+            is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding),
+        )
+        flat_x, tdef = jax.tree.flatten(state)
+        placed = [jax.device_put(x, s) for x, s in zip(flat_x, flat_s)]
+        return jax.tree.unflatten(tdef, placed)
+
+    # -- state lifecycle ------------------------------------------------------
+
+    def init_state(self) -> ts.TrainState:
+        return ts.init_state(self.cfg, self.api, jax.random.PRNGKey(self.lc.seed), self.oc)
+
+    def save(self, state: ts.TrainState):
+        host_state = jax.tree.map(np.asarray, state)
+        return self.ckpt.save(int(host_state.step), host_state)
+
+    def restore_latest(self) -> ts.TrainState | None:
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        tree, report = self.ckpt.restore(step)
+        self.last_restore_report = report
+        return jax.tree.map(jnp.asarray, tree)
+
+    # -- run --------------------------------------------------------------------
+
+    def run(self, state: ts.TrainState | None = None,
+            until: int | None = None,
+            on_step: Callable | None = None) -> ts.TrainState:
+        if state is None:
+            state = self.restore_latest() or self.init_state()
+        state = self.place_state(state)
+        until = until if until is not None else self.lc.steps
+        start = int(state.step)
+        for step in range(start, until):
+            batch = self.pipeline.device_batch(step, self.mesh, self.ax)
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.beat("host0", step, dt)
+            rec = {"step": step + 1, "loss": loss, "sec": dt,
+                   "grad_norm": float(metrics["grad_norm"])}
+            self.metrics_log.append(rec)
+            if (step + 1) % self.lc.log_every == 0:
+                print(f"step {step+1:5d}  loss {loss:.4f}  "
+                      f"gnorm {rec['grad_norm']:.3f}  {dt*1e3:.0f} ms")
+            if (step + 1) % self.lc.ckpt_every == 0 or step + 1 == until:
+                man = self.save(state)
+                print(f"  ckpt @ {step+1}: {len(man.group_ids)} CORE groups, "
+                      f"{man.total_bytes/1e6:.1f} MB, {man.save_seconds:.2f}s")
+            if on_step is not None:
+                on_step(self, state, step)
+        return state

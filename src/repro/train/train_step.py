@@ -1,0 +1,113 @@
+"""jit-able train / eval steps.
+
+make_train_step builds the full update: (state, batch) -> (state, metrics)
+with optional microbatch gradient accumulation (lax.scan over microbatch
+slices — the paper-scale models need it to fit HBM, DESIGN.md §5) and
+AdamW. in/out shardings are supplied by the launcher (launch/train.py,
+launch/dryrun.py) from the model's param specs.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import ModelApi
+from repro.models.shardings import MeshAxes
+from repro.train import optimizer as opt
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten
+)
+
+
+def init_state(cfg: ArchConfig, api: ModelApi, rng, oc: opt.OptConfig) -> TrainState:
+    params = api.init(cfg, rng)
+    return TrainState(params, opt.init_opt_state(params, oc), jnp.zeros((), jnp.int32))
+
+
+def state_shape(cfg: ArchConfig, api: ModelApi, oc: opt.OptConfig) -> TrainState:
+    """Abstract TrainState (no allocation) for AOT lowering."""
+    return jax.eval_shape(
+        lambda: init_state(cfg, api, jax.random.PRNGKey(0), oc)
+    )
+
+
+def state_specs(cfg: ArchConfig, api: ModelApi, ax: MeshAxes, oc: opt.OptConfig) -> TrainState:
+    pspecs = api.specs(cfg, ax)
+    return TrainState(pspecs, opt.opt_specs(pspecs, oc), P())
+
+
+def _split_microbatch(batch, m: int, i):
+    def sl(x):
+        mb = x.shape[0] // m
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+    return jax.tree.map(sl, batch)
+
+
+def make_loss_fn(cfg: ArchConfig, api: ModelApi, ax: MeshAxes) -> Callable:
+    def loss_fn(params, batch):
+        return api.loss(params, batch, cfg, ax)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, api: ModelApi, ax: MeshAxes, oc: opt.OptConfig,
+                    microbatches: int | None = None) -> Callable:
+    loss_fn = make_loss_fn(cfg, api, ax)
+    vg = jax.value_and_grad(loss_fn)
+    m = microbatches if microbatches is not None else cfg.microbatches
+
+    def grads_of(params, batch):
+        if m <= 1:
+            return vg(params, batch)
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, i):
+            lsum, acc = carry
+            mb = _split_microbatch(batch, m, i)
+            l, g = vg(params, mb)
+            acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return (lsum + l, acc), None
+
+        (lsum, acc), _ = jax.lax.scan(body, (jnp.zeros(()), acc0), jnp.arange(m))
+        return lsum / m, jax.tree.map(lambda a: a / m, acc)
+
+    def train_step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        params, opt_state, om = opt.adamw_update(grads, state.opt, state.params, oc)
+        metrics = {"loss": loss, **om, "step": state.step + 1}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, api: ModelApi, ax: MeshAxes) -> Callable:
+    loss_fn = make_loss_fn(cfg, api, ax)
+
+    def eval_step(state: TrainState, batch):
+        return loss_fn(state.params, batch)
+
+    return eval_step

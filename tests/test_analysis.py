@@ -1,0 +1,121 @@
+"""Tests for §5 analysis: closed forms vs Monte-Carlo, paper-claim checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import CoreCode, analysis
+from repro.core.analysis import (
+    degraded_read_core,
+    degraded_read_lrc,
+    degraded_read_mds,
+    mc_repair_core,
+    mc_repair_lrc,
+    mc_repair_mds,
+    nines,
+    resilience_core_lower,
+    resilience_lrc,
+    resilience_mds,
+)
+
+
+def test_resilience_mds_edge_cases():
+    assert resilience_mds(9, 6, 0.0) == pytest.approx(1.0)
+    assert resilience_mds(9, 6, 1.0) == pytest.approx(0.0)
+    # replication sanity: (2,1) tolerates one loss
+    assert resilience_mds(2, 1, 0.5) == pytest.approx(0.75)
+
+
+def test_resilience_mds_matches_simulation():
+    rng = np.random.default_rng(0)
+    n, k, p = 9, 6, 0.1
+    hits = sum(int((rng.random(n) < p).sum() <= n - k) for _ in range(20000))
+    assert resilience_mds(n, k, p) == pytest.approx(hits / 20000, abs=0.01)
+
+
+def test_resilience_core_lower_is_lower_bound_vs_checker():
+    from repro.core.recoverability import is_recoverable
+
+    code = CoreCode(9, 6, 3)
+    rng = np.random.default_rng(1)
+    p = 0.08
+    n_samples = 4000
+    rec = 0
+    for _ in range(n_samples):
+        fm = rng.random((code.t + 1, code.n)) < p
+        rec += is_recoverable(code, fm)
+    empirical = rec / n_samples
+    bound = resilience_core_lower(code.n, code.k, code.t, p)
+    assert bound <= empirical + 0.01  # lower bound (allow MC noise)
+
+
+def test_fig4_ordering_core_beats_lrc_at_same_stretch():
+    """Paper Fig 4: at ~1.4x stretch, CORE's (lower-bound) resilience
+    dominates LRC for realistic p. CORE (14,12,5): 14/12 * 6/5 = 1.4;
+    LRC (14,10): 1.4. (At p >~ 0.1 the CORE *lower bound* becomes loose
+    and dips below LRC's exact value — the bound crosses, not the code.)"""
+    for p in (0.002, 0.005, 0.01, 0.02, 0.05):
+        pi_l = resilience_lrc(14, 10, p)
+        pi_c = resilience_core_lower(14, 12, 5, p)
+        assert pi_c >= pi_l - 1e-12, (p, pi_c, pi_l)
+
+
+def test_nines():
+    assert nines(0.999) == pytest.approx(3.0, abs=1e-9)
+    assert nines(0.0) == pytest.approx(0.0)
+
+
+def test_single_failure_traffic_claims():
+    """Paper: single failure — CORE transfers t blocks vs k for MDS; with
+    t = k/2 this is the headline 50% saving."""
+    n, k, t = 14, 12, 6
+    res_core = mc_repair_core(n, k, t, p=0.004, samples=4000, seed=2)
+    res_mds = mc_repair_mds(n, k, p=0.004, samples=4000, seed=2)
+    # at tiny p nearly all repairs are single-failure
+    assert res_core.mean_traffic == pytest.approx(t / k, abs=0.05)
+    assert res_mds.mean_traffic == pytest.approx(1.0, abs=0.01)
+    assert res_core.mean_traffic < 0.62 * res_mds.mean_traffic
+
+
+def test_repair_time_core_much_faster():
+    """Paper Fig 6: CORE repair time ~an order of magnitude below EC
+    (vertical repairs run concurrently and independently)."""
+    n, k, t = 14, 12, 5
+    res_core = mc_repair_core(n, k, t, p=0.01, samples=2000, seed=3)
+    res_mds = mc_repair_mds(n, k, p=0.01, samples=2000, seed=3)
+    assert res_core.mean_time < 0.7 * res_mds.mean_time
+
+
+def test_lrc_single_repair_cost_average():
+    n, k = 10, 6
+    res = mc_repair_lrc(n, k, p=0.003, samples=6000, seed=4)
+    from repro.coding.lrc import avg_single_repair_cost
+
+    want = avg_single_repair_cost(n, k) / k
+    assert res.mean_traffic == pytest.approx(want, abs=0.06)
+
+
+def test_degraded_reads_low_p_all_equal_one():
+    """Paper Fig 7: at p=0.01 all three codes read ~1.0x the object."""
+    for fn, args in (
+        (degraded_read_mds, (9, 6)),
+        (degraded_read_lrc, (10, 6)),
+        (degraded_read_core, (9, 6, 3)),
+    ):
+        v = fn(*args, p=0.01, samples=3000, seed=5)
+        assert v == pytest.approx(1.0, abs=0.1), fn.__name__
+
+
+def test_degraded_reads_distributed_ec_worst():
+    """Paper Fig 8: at p=0.1, EC needs more distributed-read traffic than
+    LRC/CORE."""
+    ec = degraded_read_mds(9, 6, p=0.1, samples=4000, seed=6, distributed=True)
+    lr = degraded_read_lrc(10, 6, p=0.1, samples=4000, seed=6, distributed=True)
+    co = degraded_read_core(9, 6, 3, p=0.1, samples=4000, seed=6, distributed=True)
+    assert co < ec
+    assert lr < ec
+
+
+def test_param_sweeps_nonempty():
+    assert analysis.core_params_for_stretch(1.5)
+    assert analysis.ec_params_for_stretch(1.5)
+    assert analysis.lrc_params_for_stretch(1.67)

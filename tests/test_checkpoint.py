@@ -1,0 +1,139 @@
+"""CORE checkpoint tests: save/restore equality, degraded restore under
+node failures, background repair, restart semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CoreCheckpointer
+from repro.core import CoreCode
+from repro.storage import BlockStore, ClusterProfile
+
+
+def make_state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w1": rng.normal(size=(64, 128)).astype(np.float32),
+            "b1": rng.normal(size=(128,)).astype(np.float32),
+            "embed": jnp.asarray(rng.normal(size=(1000, 64)), dtype=jnp.bfloat16),
+        },
+        "opt": {
+            "mu": rng.normal(size=(64, 128)).astype(np.float32),
+            "nu": rng.normal(size=(64, 128)).astype(np.float32),
+        },
+        "step": np.asarray(123, dtype=np.int64),
+    }
+
+
+def trees_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def make_ckpt(num_nodes=200, code=CoreCode(9, 6, 3), block_size=1 << 12):
+    store = BlockStore(num_nodes=num_nodes)
+    return store, CoreCheckpointer(
+        store, code, ClusterProfile.network_critical(), block_size=block_size
+    )
+
+
+def test_save_restore_roundtrip():
+    store, ckpt = make_ckpt()
+    state = make_state()
+    man = ckpt.save(100, state)
+    assert man.group_ids
+    restored, rep = ckpt.restore(100)
+    trees_equal(state, restored)
+    assert rep.compute_time >= 0.0
+
+
+def test_degraded_restore_single_node_failure():
+    store, ckpt = make_ckpt()
+    state = make_state(1)
+    ckpt.save(7, state)
+    victim = store.node_of((ckpt.manifests[7].group_ids[0], 0, 2))
+    store.fail_nodes([victim])
+    restored, rep = ckpt.restore(7)
+    trees_equal(state, restored)
+    assert rep.blocks_fetched > 0
+
+
+def test_degraded_restore_multi_failure_same_group():
+    store, ckpt = make_ckpt()
+    state = make_state(2)
+    ckpt.save(8, state)
+    gid = ckpt.manifests[8].group_ids[0]
+    # fail three blocks: two in one row (row decode) + one elsewhere (vertical)
+    victims = [store.node_of((gid, 0, 1)), store.node_of((gid, 0, 4)),
+               store.node_of((gid, 2, 7))]
+    store.fail_nodes(victims)
+    restored, _ = ckpt.restore(8)
+    trees_equal(state, restored)
+
+
+def test_background_repair_replenishes_blocks():
+    store, ckpt = make_ckpt()
+    state = make_state(3)
+    ckpt.save(9, state)
+    gid = ckpt.manifests[9].group_ids[0]
+    victims = [store.node_of((gid, 1, 0)), store.node_of((gid, 3, 5))]
+    store.fail_nodes(victims)
+    rep = ckpt.repair(9)
+    assert rep.recovered and rep.blocks_repaired >= 2
+    # all blocks available again on alive nodes
+    fm = store.failure_matrix(gid, ckpt.code.rows, ckpt.code.n)
+    assert not fm.any()
+    restored, rd = ckpt.restore(9)
+    trees_equal(state, restored)
+    # post-repair restore is clean: systematic reads only
+    k, t = ckpt.code.k, ckpt.code.t
+    groups = len(ckpt.manifests[9].group_ids)
+    assert rd.blocks_fetched == groups * t * k
+
+
+def test_restore_beyond_rs_tolerance_via_vertical():
+    """Lose m+1 blocks of one object row — impossible for plain RS(n,k),
+    recovered through cross-object parity."""
+    store, ckpt = make_ckpt()
+    state = make_state(4)
+    ckpt.save(10, state)
+    gid = ckpt.manifests[10].group_ids[0]
+    m = ckpt.code.m
+    victims = [store.node_of((gid, 0, c)) for c in range(m + 1)]
+    store.fail_nodes(victims)
+    restored, _ = ckpt.restore(10)
+    trees_equal(state, restored)
+
+
+def test_checkpoint_restart_training_semantics():
+    """Simulated crash/restart: latest_step + restore gives back the exact
+    train state."""
+    store, ckpt = make_ckpt()
+    s1, s2 = make_state(5), make_state(6)
+    ckpt.save(100, s1)
+    ckpt.save(200, s2)
+    assert ckpt.latest_step() == 200
+    restored, _ = ckpt.restore(200)
+    trees_equal(s2, restored)
+
+
+def test_restore_fails_loud_when_unrecoverable():
+    from repro.storage import UnrecoverableError
+
+    store, ckpt = make_ckpt()
+    state = make_state(7)
+    ckpt.save(11, state)
+    gid = ckpt.manifests[11].group_ids[0]
+    m = ckpt.code.m
+    victims = set()
+    for r in (0, 1):  # two rows, identical m+1 columns -> irrecoverable
+        for c in range(m + 1):
+            victims.add(store.node_of((gid, r, c)))
+    store.fail_nodes(victims)
+    with pytest.raises(UnrecoverableError):
+        ckpt.restore(11)

@@ -1,0 +1,137 @@
+"""Numerics oracles for the chunked/scanned compute paths: each
+optimized formulation must match its naive reference (hypothesis sweeps
+shapes; these are the model-side analogues of the kernel allclose
+tests)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models import mamba, rglru
+from repro.models.shardings import SINGLE
+
+
+def naive_causal_attention(q, k, v, window=None):
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, k).astype(jnp.float32) / math.sqrt(d)
+    pos = np.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    scores = jnp.where(jnp.asarray(mask)[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqt,bthd->bqhd", w, v).reshape(b, s, h * d)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([8, 24, 64]),
+    chunk=st.sampled_from([4, 8, 16, 64]),
+    window=st.sampled_from([None, 4, 16]),
+)
+def test_chunked_attention_matches_naive(s, chunk, window):
+    cfg = get_config("qwen2_72b").reduced(
+        num_layers=1, attn_chunk=chunk, sliding_window=window
+    )
+    rng = jax.random.PRNGKey(0)
+    q, k, v = (
+        jax.random.normal(jax.random.fold_in(rng, i), (2, s, 4, 16), jnp.float32)
+        for i in range(3)
+    )
+    got = L.attention_core_train(q, k, v, cfg, SINGLE)
+    want = naive_causal_attention(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def _naive_selective_scan(da, dbu, cm):
+    # da/dbu: (B,S,di,N) f32; cm: (B,S,N)
+    b, s, di, n = da.shape
+    h = np.zeros((b, di, n), np.float32)
+    ys = []
+    for t in range(s):
+        h = np.asarray(da[:, t]) * h + np.asarray(dbu[:, t])
+        ys.append(np.einsum("bdn,bn->bd", h, np.asarray(cm[:, t])))
+    return np.stack(ys, axis=1)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([6, 16, 32]), chunk=st.sampled_from([4, 8, 32]))
+def test_mamba_chunked_scan_matches_sequential(s, chunk):
+    b, di, n = 2, 8, 4
+    rng = np.random.default_rng(0)
+    da = jnp.asarray(rng.uniform(0.7, 0.99, (b, s, di, n)).astype(np.float32))
+    dbu = jnp.asarray(rng.standard_normal((b, s, di, n)).astype(np.float32))
+    cm = jnp.asarray(rng.standard_normal((b, s, n)).astype(np.float32))
+
+    # chunked path (mirrors mamba_mix's inner loop)
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    nch = s // chunk if s % chunk == 0 else 1
+    chunk_eff = s // nch
+    ys = []
+    h = h0
+    for i in range(nch):
+        sl = slice(i * chunk_eff, (i + 1) * chunk_eff)
+        h_all, h = mamba._chunk_scan(da[:, sl], dbu[:, sl], h)
+        ys.append(jnp.einsum("bcdn,bcn->bcd", h_all, cm[:, sl]))
+    got = jnp.concatenate(ys, axis=1)
+    want = _naive_selective_scan(da, dbu, cm)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([5, 12, 33]), chunk=st.sampled_from([4, 16]))
+def test_rglru_scan_matches_stepwise(s, chunk):
+    cfg = get_config("recurrentgemma_9b").reduced(scan_chunk=chunk)
+    p = rglru.init_rglru(jax.random.PRNGKey(3), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, s, cfg.lru_width), jnp.float32)
+
+    ys, h_last = rglru.rglru_scan(x, p, cfg)
+    # stepwise reference
+    h = jnp.zeros((2, cfg.lru_width), jnp.float32)
+    outs = []
+    for t in range(s):
+        y1, h = rglru.rglru_step(x[:, t : t + 1], p, cfg, h)
+        outs.append(y1)
+    want = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_decode_attend_matches_expanded():
+    """_grouped_attend (GQA-native) == expand_kv + dense softmax."""
+    cfg = get_config("mistral_large_123b").reduced(num_heads=8, num_kv_heads=2,
+                                                   sliding_window=None)
+    rng = jax.random.PRNGKey(0)
+    b, smax, hd = 2, 16, cfg.head_dim
+    q = jax.random.normal(rng, (b, 1, 8, hd), jnp.float32)
+    ck = jax.random.normal(jax.random.fold_in(rng, 1), (b, smax, 2, hd), jnp.float32)
+    cv = jax.random.normal(jax.random.fold_in(rng, 2), (b, smax, 2, hd), jnp.float32)
+    valid = jnp.arange(smax) <= 9
+    o, m, l = L._grouped_attend(q, ck, cv, cfg, valid)
+    got = (o / l[..., None]).transpose(0, 3, 1, 2, 4).reshape(b, 1, 8 * hd)
+
+    ke, ve = L.expand_kv(ck, cfg), L.expand_kv(cv, cfg)
+    scores = jnp.einsum("bqhd,bthd->bhqt", q, ke).astype(jnp.float32) / math.sqrt(hd)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    want = jnp.einsum("bhqt,bthd->bqhd", w, ve).reshape(b, 1, 8 * hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_ring_valid_semantics():
+    # unwrapped cache: positions 0..pos valid
+    v = L._ring_valid(jnp.asarray(5), 16, None)
+    assert np.asarray(v).tolist() == [True] * 6 + [False] * 10
+    # wrapped window cache (smax=4, pos=9): slots hold abs pos {8,9,6,7}
+    v = L._ring_valid(jnp.asarray(9), 4, None)
+    assert np.asarray(v).all()
+    v = L._ring_valid(jnp.asarray(9), 4, 2)  # window 2: only abs 8,9 valid
+    assert np.asarray(v).tolist() == [True, True, False, False]

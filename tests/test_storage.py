@@ -1,0 +1,173 @@
+"""Storage substrate tests: placement, failure injection, BlockFixer modes
+(paper §7/§8 semantics), degraded reads."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CoreCode, CoreCodec
+from repro.storage import BlockFixer, BlockStore, ClusterProfile
+
+
+def make_group(code: CoreCode, store: BlockStore, group_id="g0", q=1024, seed=0):
+    rng = np.random.default_rng(seed)
+    objects = rng.integers(0, 256, size=(code.t, code.k, q), dtype=np.uint8)
+    matrix = np.asarray(CoreCodec(code).encode(jnp.asarray(objects)))
+    store.put_group(group_id, matrix)
+    return objects, matrix
+
+
+def test_placement_anti_colocation():
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=40)
+    make_group(code, store)
+    nodes = [store.node_of(("g0", r, c)) for r in range(4) for c in range(9)]
+    assert len(set(nodes)) == len(nodes)  # every block on a distinct node
+
+
+def test_node_failure_marks_blocks_unavailable():
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=40)
+    make_group(code, store)
+    victim = store.node_of(("g0", 1, 2))
+    store.fail_nodes([victim])
+    assert not store.available(("g0", 1, 2))
+    fm = store.failure_matrix("g0", 4, 9)
+    assert fm.sum() == 1 and fm[1, 2]
+
+
+@pytest.mark.parametrize("mode,expected_fetch", [
+    ("hdfs_raid", 8),       # all remaining blocks of the stripe
+    ("hdfs_raid_opt", 6),   # Opt1: exactly k
+    ("core", 3),            # vertical: t blocks
+])
+def test_single_failure_fetch_counts_9_6_3(mode, expected_fetch):
+    """Paper Fig 12 'X' pattern, (9,6,3): the fetch counts that produce
+    the 50%-less-bandwidth headline."""
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=60)
+    _, matrix = make_group(code, store)
+    store.fail_nodes([store.node_of(("g0", 1, 3))])
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode=mode)
+    report = fixer.fix_group("g0")
+    assert report.recovered
+    assert report.blocks_fetched == expected_fetch
+    np.testing.assert_array_equal(store.blocks[("g0", 1, 3)], matrix[1, 3])
+
+
+@pytest.mark.parametrize("mode,expected_fetch", [
+    ("hdfs_raid", 7 + 8),    # two sequential full-stripe fetches
+    ("hdfs_raid_opt", 6),    # Opt2: one decode for both
+    ("core", 6),             # two vertical repairs, t each
+])
+def test_double_failure_same_row_9_6_3(mode, expected_fetch):
+    """Paper Fig 12 'XX' pattern (both failures on the same object)."""
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=60)
+    _, matrix = make_group(code, store)
+    store.fail_nodes([store.node_of(("g0", 1, 3)), store.node_of(("g0", 1, 5))])
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode=mode)
+    report = fixer.fix_group("g0")
+    assert report.recovered
+    assert report.blocks_fetched == expected_fetch
+    np.testing.assert_array_equal(store.blocks[("g0", 1, 3)], matrix[1, 3])
+    np.testing.assert_array_equal(store.blocks[("g0", 1, 5)], matrix[1, 5])
+
+
+def test_double_failure_14_12_5_bandwidth_gap():
+    """(14,12,5) XX: CORE 2t=10 vs optimized RS k=12 — the ~16% saving."""
+    code = CoreCode(14, 12, 5)
+    store = BlockStore(num_nodes=120)
+    make_group(code, store)
+    store.fail_nodes([store.node_of(("g0", 2, 1)), store.node_of(("g0", 2, 7))])
+    core = BlockFixer(store, code, ClusterProfile.network_critical(), mode="core")
+    r_core = core.fix_group("g0")
+    assert r_core.blocks_fetched == 10
+    # rebuild a fresh store for the RS comparison
+    store2 = BlockStore(num_nodes=120)
+    make_group(code, store2)
+    store2.fail_nodes([store2.node_of(("g0", 2, 1)), store2.node_of(("g0", 2, 7))])
+    opt = BlockFixer(store2, code, ClusterProfile.network_critical(), mode="hdfs_raid_opt")
+    r_opt = opt.fix_group("g0")
+    assert r_opt.blocks_fetched == 12
+    assert 1 - r_core.blocks_fetched / r_opt.blocks_fetched == pytest.approx(1 / 6)
+
+
+def test_core_repairs_beyond_rs_tolerance():
+    """A row with m+1 failures is lost to plain RS but CORE recovers it
+    via vertical parities (the paper's fault-tolerance bonus)."""
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=60)
+    _, matrix = make_group(code, store)
+    cells = [(1, c) for c in range(4)]  # 4 > m = 3 failures in one row
+    store.fail_nodes([store.node_of(("g0", r, c)) for r, c in cells])
+    raid = BlockFixer(store, code, ClusterProfile.network_critical(), mode="hdfs_raid_opt")
+    # RS alone cannot: row 1 has > m failures
+    rep = raid.fix_group("g0")
+    assert not rep.recovered
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode="core")
+    report = fixer.fix_group("g0")
+    assert report.recovered
+    for r, c in cells:
+        np.testing.assert_array_equal(store.blocks[("g0", r, c)], matrix[r, c])
+
+
+def test_network_vs_compute_profiles():
+    """Vertical XOR repair must beat RS decode on compute time; the
+    network-critical profile must amplify network gaps."""
+    code = CoreCode(14, 12, 5)
+    q = 1 << 18  # 256 KiB blocks
+    results = {}
+    for mode in ("core", "hdfs_raid_opt"):
+        store = BlockStore(num_nodes=120)
+        make_group(code, store, q=q)
+        store.fail_nodes([store.node_of(("g0", 2, 3))])
+        fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode=mode)
+        fixer.fix_group("g0")  # warm the jit caches
+        store.fail_nodes([store.node_of(("g0", 2, 4))])
+        results[mode] = fixer.fix_group("g0")
+    assert results["core"].network_time < results["hdfs_raid_opt"].network_time
+    assert results["core"].bytes_fetched < results["hdfs_raid_opt"].bytes_fetched
+
+
+def test_degraded_read_with_vertical_repair():
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=60)
+    objects, _ = make_group(code, store)
+    store.fail_nodes([store.node_of(("g0", 0, 2))])
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode="core")
+    data, report = fixer.degraded_read("g0", 0)
+    np.testing.assert_array_equal(data, objects[0])
+    # 5 direct reads + 3 vertical sources
+    assert report.blocks_fetched == 5 + 3
+    # read is non-destructive: the block is still missing
+    assert not store.available(("g0", 0, 2))
+
+
+def test_degraded_read_falls_back_to_row_decode():
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=60)
+    objects, _ = make_group(code, store)
+    # two failures in the same column -> vertical impossible for (0,2)
+    store.fail_nodes([store.node_of(("g0", 0, 2)), store.node_of(("g0", 2, 2))])
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode="core")
+    data, report = fixer.degraded_read("g0", 0)
+    np.testing.assert_array_equal(data, objects[0])
+    assert report.blocks_fetched == 6  # full row decode
+
+
+def test_partial_recovery_across_clusters():
+    """An unrecoverable cluster must not block repair of an independent
+    recoverable cluster (§6.1 benefit ii)."""
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=80)
+    _, matrix = make_group(code, store)
+    # unrecoverable cluster: two rows x (m+1) identical columns
+    bad = [(0, c) for c in range(4)] + [(1, c) for c in range(4)]
+    # recoverable singleton elsewhere
+    good = [(3, 8)]
+    store.fail_nodes([store.node_of(("g0", r, c)) for r, c in bad + good])
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode="core")
+    report = fixer.fix_group("g0")
+    assert not report.recovered  # overall group not fully recovered
+    np.testing.assert_array_equal(store.blocks[("g0", 3, 8)], matrix[3, 8])

@@ -1,0 +1,146 @@
+"""Integration tests: training loop + CORE checkpoint/restart under node
+failure, elastic runtime units, data pipeline determinism, serving slot
+manager."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticPipeline
+from repro.train import optimizer as opt
+from repro.train.elastic import ElasticPlan, HostMonitor, shrink_mesh_shape
+from repro.train.loop import LoopConfig, Trainer
+
+
+@pytest.fixture(scope="module")
+def tiny_trainer():
+    cfg = get_config("qwen2_72b").reduced(num_layers=2)
+    lc = LoopConfig(steps=6, ckpt_every=3, log_every=100, seq_len=32,
+                    global_batch=2, num_nodes=20)
+    oc = opt.OptConfig(lr=1e-3, warmup_steps=2, decay_steps=10)
+    return Trainer(cfg, lc, oc)
+
+
+def test_train_ckpt_kill_restore_resume(tiny_trainer):
+    tr = tiny_trainer
+    state = tr.run()
+    assert int(np.asarray(state.step)) == 6
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert all(np.isfinite(l) for l in losses)
+
+    # kill two storage nodes -> degraded restore must still be bit-exact
+    tr.store.fail_nodes([0, 1])
+    restored = tr.restore_latest()
+    assert restored is not None
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert tr.last_restore_report.blocks_fetched > 0
+
+    # background repair regenerates the dead nodes' blocks
+    tr.store.heal_node(0)
+    tr.store.heal_node(1)
+    rep = tr.ckpt.repair(6)
+    assert rep.recovered
+
+    # resume training from the restored state
+    state2 = tr.run(state=restored, until=8)
+    assert int(np.asarray(state2.step)) == 8
+
+
+def test_quantized_v_optimizer_converges():
+    cfg = get_config("qwen2_72b").reduced(num_layers=2)
+    lc = LoopConfig(steps=5, ckpt_every=100, log_every=100, seq_len=32,
+                    global_batch=2)
+    tr = Trainer(cfg, lc, opt.OptConfig(lr=1e-3, quantize_v=True,
+                                        warmup_steps=1, decay_steps=10))
+    state = tr.run()
+    assert np.isfinite(tr.metrics_log[-1]["loss"])
+    # quantized leaves are (int8 q, f32 scales) tuples
+    leaves = jax.tree.leaves(state.opt["v"])
+    assert any(l.dtype == jnp.int8 for l in leaves)
+
+
+# -- elastic ------------------------------------------------------------------
+
+
+def test_host_monitor_detects_stragglers_and_deaths():
+    m = HostMonitor(timeout_s=10, straggler_factor=2.0)
+    for step in range(5):
+        for h in ("h0", "h1", "h2", "h3"):
+            m.beat(h, step, 1.0 if h != "h3" else 3.5, now=float(step))
+    assert m.stragglers() == ["h3"]
+    m.beat("h0", 5, 1.0, now=100.0)
+    assert "h1" in m.dead_hosts(now=100.0) and "h0" not in m.dead_hosts(now=100.0)
+
+
+def test_elastic_plan_replace_and_shrink():
+    plan = ElasticPlan(hosts=[0, 1, 2, 3], spares=[7, 8])
+    pos, new = plan.replace(2)
+    assert pos == 2 and new == 7 and plan.hosts == [0, 1, 7, 3]
+    released = plan.shrink_to(2)
+    assert plan.hosts == [0, 1] and released == [7, 3]
+    assert shrink_mesh_shape(16, 3) == 8  # largest divisor of 16 <= 13
+    assert shrink_mesh_shape(16, 1) == 8
+
+
+# -- data pipeline --------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 5))
+def test_pipeline_deterministic_and_in_range(step, seed):
+    cfg = get_config("olmoe_1b_7b").reduced()
+    p1 = SyntheticPipeline(cfg, seq_len=16, global_batch=2, seed=seed)
+    p2 = SyntheticPipeline(cfg, seq_len=16, global_batch=2, seed=seed)
+    b1, b2 = p1.batch_at(step), p2.batch_at(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < cfg.vocab_size
+    np.testing.assert_array_equal(
+        b1["labels"][:, :-1], b1["tokens"][:, 1:]
+    )
+
+
+def test_pipeline_stub_embeddings():
+    for arch in ("pixtral_12b", "seamless_m4t_large_v2"):
+        cfg = get_config(arch).reduced()
+        p = SyntheticPipeline(cfg, seq_len=32, global_batch=2)
+        b = p.batch_at(0)
+        key = "patch_embed" if cfg.family == "vlm" else "src_embed"
+        assert b[key].shape == (2, cfg.num_stub_tokens, cfg.d_model)
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def test_slot_manager_continuous_batching():
+    from repro.serve.kvcache import Request, SlotManager
+
+    mgr = SlotManager(batch=2, cache_len=64)
+    for rid in range(5):
+        mgr.submit(Request(rid, np.arange(4, dtype=np.int32), max_new=3))
+    served = 0
+    steps = 0
+    while (mgr.live or mgr.waiting) and steps < 100:
+        mgr.admit()
+        assert mgr.live <= 2
+        toks = np.arange(mgr.batch, dtype=np.int32)
+        mgr.record(toks)
+        steps += 1
+    assert len(mgr.finished) == 5
+    assert all(len(r.generated) == 3 for r in mgr.finished)
+
+
+def test_serve_cache_bytes_accounting():
+    from repro.models.registry import get_model
+    from repro.serve.kvcache import cache_bytes
+
+    cfg = get_config("mistral_large_123b")
+    api = get_model(cfg)
+    got = cache_bytes(cfg, api, batch=128, cache_len=32768)
+    want = 2 * cfg.num_layers * 128 * 32768 * cfg.num_kv_heads * cfg.head_dim * 2
+    assert got == want

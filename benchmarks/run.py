@@ -1,10 +1,12 @@
-"""Benchmark driver: one module per paper figure/table (+ kernels).
+"""Benchmark driver: one module per paper figure/table (+ kernels and the
+serving gateway).
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,...]``
+``PYTHONPATH=src python -m benchmarks.run [--full|--fast] [--only fig12,...]``
 
 Prints every row as CSV-ish dicts, then the paper-claim validation
 summary (PASS/FAIL per headline claim). --full uses paper-scale sample
-counts (slow on 1 CPU).
+counts (slow on 1 CPU); --fast runs only the quick smoke set
+(gateway_load + kernels) for the perf trajectory.
 """
 
 from __future__ import annotations
@@ -24,16 +26,26 @@ MODULES = [
     "repair_e2e",        # Fig 12
     "scheduling_e2e",    # Fig 13
     "kernels",           # Pallas kernels
+    "gateway_load",      # serving gateway (throughput / latency / coalescing)
 ]
+
+FAST_MODULES = ["gateway_load", "kernels"]
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sample counts")
+    ap.add_argument("--fast", action="store_true",
+                    help="quick smoke set only (gateway_load + kernels)")
     ap.add_argument("--only", default=None, help="comma-separated module list")
     args = ap.parse_args()
 
-    mods = args.only.split(",") if args.only else MODULES
+    if args.only:
+        mods = args.only.split(",")
+    elif args.fast:
+        mods = FAST_MODULES
+    else:
+        mods = MODULES
     all_checks: list[str] = []
     failed = False
     for name in mods:

@@ -1,0 +1,26 @@
+"""Version-compat shims for the jax 0.4.x <-> 0.5+ API split.
+
+The repo targets current jax APIs; on older installs (e.g. the 0.4.37
+baked into this container) the same entry points live elsewhere or take
+different kwargs. Centralizing the fallbacks keeps call sites on the
+modern spelling. Siblings: models/shardings.get_abstract_mesh,
+launch/mesh.mesh_context and _auto_axis_kwargs,
+analysis/hlo_cost.builtin_cost_dict.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map.shard_map``
+    (0.4.x, where ``check_vma`` was named ``check_rep``)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

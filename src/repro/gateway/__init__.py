@@ -1,0 +1,47 @@
+# Client-facing object-storage serving layer over the simulated CORE
+# cluster: Zipf/Poisson workloads, per-request degraded-read planning
+# (paper Table 1), shape-bucketed batched GF(256) decode, LRU block
+# caching, and foreground/background fabric sharing with repair.
+from repro.gateway.cache import CacheStats, LRUBlockCache
+from repro.gateway.coalescer import CoalescerStats, DecodeCoalescer
+from repro.gateway.gateway import (
+    GatewayConfig,
+    GatewayReport,
+    ObjectGateway,
+    RequestRecord,
+)
+from repro.gateway.planner import (
+    DecodeOp,
+    DegradedReadPlanner,
+    ReadPlan,
+    UnreadableObjectError,
+)
+from repro.gateway.workload import (
+    FailureEvent,
+    Request,
+    WorkloadConfig,
+    generate_requests,
+    plan_failures,
+    zipf_probs,
+)
+
+__all__ = [
+    "CacheStats",
+    "LRUBlockCache",
+    "CoalescerStats",
+    "DecodeCoalescer",
+    "GatewayConfig",
+    "GatewayReport",
+    "ObjectGateway",
+    "RequestRecord",
+    "DecodeOp",
+    "DegradedReadPlanner",
+    "ReadPlan",
+    "UnreadableObjectError",
+    "FailureEvent",
+    "Request",
+    "WorkloadConfig",
+    "generate_requests",
+    "plan_failures",
+    "zipf_probs",
+]

@@ -1,0 +1,76 @@
+"""LRU block cache with hit/miss accounting.
+
+Sits between the gateway and the fabric: a hit serves the block from
+gateway memory (no network transfer, no reconstruction); a miss goes to
+the block store. Decoded (reconstructed) blocks are cached too, so a hot
+degraded object pays its reconstruction once per eviction period rather
+than once per request — the standard production mitigation for repair
+read amplification.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.storage.blockstore import BlockKey
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class LRUBlockCache:
+    def __init__(self, capacity_bytes: int):
+        self.capacity_bytes = int(capacity_bytes)
+        self._blocks: OrderedDict[BlockKey, np.ndarray] = OrderedDict()
+        self._bytes = 0
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def __contains__(self, key: BlockKey) -> bool:
+        """Membership probe with no stats / LRU side effects (planning)."""
+        return key in self._blocks
+
+    def get(self, key: BlockKey) -> np.ndarray | None:
+        blk = self._blocks.get(key)
+        if blk is None:
+            self.stats.misses += 1
+            return None
+        self._blocks.move_to_end(key)
+        self.stats.hits += 1
+        return blk
+
+    def put(self, key: BlockKey, block: np.ndarray) -> None:
+        if block.nbytes > self.capacity_bytes:
+            return
+        old = self._blocks.pop(key, None)
+        if old is not None:
+            self._bytes -= old.nbytes
+        self._blocks[key] = block
+        self._bytes += block.nbytes
+        while self._bytes > self.capacity_bytes:
+            _, evicted = self._blocks.popitem(last=False)
+            self._bytes -= evicted.nbytes
+            self.stats.evictions += 1
+
+    def invalidate(self, key: BlockKey) -> None:
+        old = self._blocks.pop(key, None)
+        if old is not None:
+            self._bytes -= old.nbytes

@@ -1,0 +1,128 @@
+"""Request coalescer: batch concurrent degraded-read decodes that share a
+decode shape into ONE stacked kernel launch.
+
+Under failures, a popular object's neighbours all degrade the same way
+(same (kind, M, K) decode shape, same block size), so a busy gateway sees
+many same-shaped decodes per batching window. Dispatching them one by one
+pays per-launch overhead B times; the stacked (B, M, K) x (B, K, N)
+Pallas entry (kernels/gf256_matmul.py) pays it once. Vertical XOR repairs
+batch the same way through the stacked xor_parity kernel.
+
+Compute time is measured on the real jitted kernels (block_until_ready)
+and scaled by the cluster profile, mirroring BlockFixer's convention.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gateway.planner import DecodeOp
+from repro.kernels import ops
+from repro.storage.blockstore import BlockKey
+
+
+@dataclass
+class CoalescerStats:
+    decode_ops: int = 0  # logical reconstructions requested
+    decode_calls: int = 0  # actual kernel launches issued
+    max_batch: int = 0
+    compute_time: float = 0.0  # scaled seconds, cumulative
+    batch_sizes: list[int] = field(default_factory=list)
+    ops_by_kind: dict[str, int] = field(default_factory=dict)
+    sources_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def coalescing_ratio(self) -> float:
+        """ops per launch; > 1 means batching is happening."""
+        return self.decode_ops / self.decode_calls if self.decode_calls else 0.0
+
+    def sources_per_op(self, kind: str) -> float:
+        """Mean source blocks per reconstruction of this kind — the
+        paper's Table 1 costs: exactly t for "V", exactly k for "H"."""
+        n = self.ops_by_kind.get(kind, 0)
+        return self.sources_by_kind.get(kind, 0) / n if n else 0.0
+
+
+class DecodeCoalescer:
+    def __init__(self, compute_scale: float = 1.0, interpret: bool | None = None):
+        self.compute_scale = compute_scale
+        self.interpret = interpret
+        self.stats = CoalescerStats()
+        self._warm: set[tuple] = set()  # traced (shape, B, q) signatures
+
+    def execute(
+        self,
+        decode_ops: list[DecodeOp],
+        fetch: Callable[[BlockKey], np.ndarray],
+    ) -> tuple[list[dict[int, np.ndarray]], float]:
+        """Run all ``decode_ops``, batching by shape bucket.
+
+        Returns (results, compute_seconds) where results[i] maps target
+        column -> reconstructed block for decode_ops[i], and
+        compute_seconds is the scaled wall time of this execution (all
+        ops in a window wait on the same launches).
+        """
+        results: list[dict[int, np.ndarray]] = [dict() for _ in decode_ops]
+        if not decode_ops:
+            return results, 0.0
+        buckets: dict[tuple, list[int]] = defaultdict(list)
+        for i, op in enumerate(decode_ops):
+            buckets[op.shape_key].append(i)
+        window_compute = 0.0
+        for key, idxs in buckets.items():
+            kind = key[0]
+            if kind == "V":
+                data = np.stack(
+                    [np.stack([fetch(s) for s in decode_ops[i].sources]) for i in idxs]
+                )  # (B, T, q)
+                launch = lambda: ops.xor_parity_batched(
+                    jnp.asarray(data), interpret=self.interpret
+                )
+            else:
+                coefs = np.stack([decode_ops[i].coeffs for i in idxs])  # (B, M, K)
+                data = np.stack(
+                    [np.stack([fetch(s) for s in decode_ops[i].sources]) for i in idxs]
+                )  # (B, K, q)
+                launch = lambda: ops.gf256_matmul_batched(
+                    coefs, jnp.asarray(data), interpret=self.interpret
+                )
+            # Untimed warm-up on first sight of a traced signature: the
+            # batch size B and byte length are jit shape keys, and the
+            # one-off trace/compile cost must not be billed to the
+            # window's simulated decode latency.
+            sig = (key, data.shape[0], data.shape[-1])
+            if sig not in self._warm:
+                jax.block_until_ready(launch())
+                self._warm.add(sig)
+            t0 = time.perf_counter()
+            out = launch()
+            jax.block_until_ready(out)
+            out = np.asarray(out)
+            if kind == "V":
+                for b, i in enumerate(idxs):  # out: (B, q)
+                    results[i][decode_ops[i].targets[0]] = out[b]
+            else:
+                for b, i in enumerate(idxs):  # out: (B, M, q)
+                    for m, col in enumerate(decode_ops[i].targets):
+                        results[i][col] = out[b, m]
+            dt = (time.perf_counter() - t0) * self.compute_scale
+            window_compute += dt
+            self.stats.decode_calls += 1
+            self.stats.decode_ops += len(idxs)
+            self.stats.max_batch = max(self.stats.max_batch, len(idxs))
+            self.stats.batch_sizes.append(len(idxs))
+            self.stats.ops_by_kind[kind] = (
+                self.stats.ops_by_kind.get(kind, 0) + len(idxs)
+            )
+            self.stats.sources_by_kind[kind] = self.stats.sources_by_kind.get(
+                kind, 0
+            ) + sum(len(decode_ops[i].sources) for i in idxs)
+        self.stats.compute_time += window_compute
+        return results, window_compute

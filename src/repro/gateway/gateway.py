@@ -1,0 +1,494 @@
+"""The object-storage serving gateway: request-driven PUT/GET over the
+simulated CORE cluster, end to end.
+
+Event loop: requests (Poisson arrivals) are grouped into small batching
+windows; each window's GETs are planned against the live failure set
+(planner.py), their reconstructions coalesced into batched kernel
+launches (coalescer.py), and every byte moved rides the shared
+NetSimulator fabric — where background repair traffic (BlockFixer at
+BACKGROUND priority) contends with foreground reads, instead of running
+in a separate universe. Block contents are real; every degraded GET is
+verified against ground truth.
+
+Latency model per request: arrival -> (cache | fabric transfers to the
+request's client port) -> batched decode (all ops of a window wait on
+the shared launches) -> completion. Decode compute is measured on the
+real jitted kernels and scaled by the cluster profile.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.product_code import CoreCode, CoreCodec
+from repro.gateway.cache import LRUBlockCache
+from repro.gateway.coalescer import DecodeCoalescer
+from repro.gateway.planner import (
+    DegradedReadPlanner,
+    ReadPlan,
+    UnreadableObjectError,
+)
+from repro.gateway.workload import FailureEvent, Request
+from repro.storage.blockstore import BlockKey, BlockStore
+from repro.storage.netmodel import (
+    BACKGROUND,
+    FOREGROUND,
+    ClusterProfile,
+    NetSimulator,
+    Transfer,
+)
+from repro.storage.repair import BlockFixer
+
+
+@dataclass(frozen=True)
+class GatewayConfig:
+    batch_window: float = 0.002  # seconds of arrival coalescing
+    cache_bytes: int = 0  # 0 disables the block cache
+    num_client_ports: int = 32  # parallel client-side NICs
+    background_share: float = 0.5  # repair's fraction of a link
+    repair_on_failure: bool = False  # run BlockFixer after detection
+    repair_delay: float = 5.0  # failure-detection lag (seconds)
+    verify: bool = True  # check every GET against ground truth
+    interpret: bool | None = None  # kernel backend override
+
+
+@dataclass
+class RequestRecord:
+    time: float
+    object_id: int
+    kind: str
+    latency: float | None  # None => unrecoverable
+    degraded: bool
+    bytes_read: int  # fabric bytes moved for this request
+    reconstruction_blocks: int  # planner's Table-1 traffic
+    cache_hits: int
+
+
+@dataclass
+class GatewayReport:
+    records: list[RequestRecord] = field(default_factory=list)
+    repair_reports: list = field(default_factory=list)
+
+    # -- aggregates -----------------------------------------------------------
+    @property
+    def completed(self) -> list[RequestRecord]:
+        return [r for r in self.records if r.latency is not None]
+
+    @property
+    def degraded_gets(self) -> list[RequestRecord]:
+        return [r for r in self.completed if r.kind == "get" and r.degraded]
+
+    def latency_percentile(self, q: float) -> float:
+        lats = [r.latency for r in self.completed]
+        return float(np.percentile(lats, q)) if lats else 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Completed requests per second of simulated trace time."""
+        done = self.completed
+        if not done:
+            return 0.0
+        span = max(r.time + r.latency for r in done) - min(r.time for r in done)
+        return len(done) / span if span > 0 else float("inf")
+
+    @property
+    def bytes_per_degraded_get(self) -> float:
+        deg = self.degraded_gets
+        return sum(r.bytes_read for r in deg) / len(deg) if deg else 0.0
+
+    @property
+    def reconstruction_blocks_per_degraded_get(self) -> float:
+        deg = self.degraded_gets
+        return (
+            sum(r.reconstruction_blocks for r in deg) / len(deg) if deg else 0.0
+        )
+
+
+class ObjectGateway:
+    """Serves a trace of PUT/GET requests over a BlockStore cluster."""
+
+    def __init__(
+        self,
+        code: CoreCode,
+        profile: ClusterProfile,
+        num_nodes: int,
+        config: GatewayConfig | None = None,
+    ):
+        self.code = code
+        self.codec = CoreCodec(code)
+        self.profile = profile
+        self.config = config or GatewayConfig()
+        self.store = BlockStore(num_nodes=num_nodes)
+        self.sim = NetSimulator(
+            profile, background_share=self.config.background_share
+        )
+        self.cache = (
+            LRUBlockCache(self.config.cache_bytes)
+            if self.config.cache_bytes
+            else None
+        )
+        self.planner = DegradedReadPlanner(
+            self.store, code, available_fn=self._available
+        )
+        self.coalescer = DecodeCoalescer(
+            compute_scale=profile.compute_scale,
+            interpret=self.config.interpret,
+        )
+        self.fixer = BlockFixer(
+            self.store,
+            code,
+            profile,
+            mode="core",
+            sim=self.sim,
+            priority=BACKGROUND,
+        )
+        self._objects: dict[int, tuple[str, int]] = {}  # object -> (group, row)
+        self._groups: dict[str, list[int]] = {}
+        self._expected: dict[int, np.ndarray] = {}  # ground truth (k, q)
+        self._block_bytes = 0
+        # Repaired blocks become visible only once the repair's fabric
+        # transfers complete: key -> completion time of its write-back.
+        self._healing: dict[BlockKey, float] = {}
+        self._clock = 0.0  # logical time of the request being planned
+
+    # -- availability: store OR cache, gated on repair completion --------------
+    def _available(self, key: BlockKey) -> bool:
+        if self.store.available(key):
+            healed_at = self._healing.get(key)
+            if healed_at is not None:
+                if self._clock < healed_at:
+                    # the repair wrote the block, but its transfers are
+                    # still in flight at this request's time
+                    return self.cache is not None and key in self.cache
+                del self._healing[key]
+            return True
+        return self.cache is not None and key in self.cache
+
+    # -- bulk load (trace setup; not metered on the fabric) --------------------
+    def load_objects(self, objects: np.ndarray) -> None:
+        """objects: (num_objects, k, q) uint8. Packs t objects per CORE
+        group (zero-padding the last group) and places all groups."""
+        num, k, q = objects.shape
+        if k != self.code.k:
+            raise ValueError(f"objects must have k={self.code.k} blocks")
+        self._block_bytes = int(q)
+        t = self.code.t
+        for g0 in range(0, num, t):
+            chunk = objects[g0 : g0 + t]
+            if chunk.shape[0] < t:
+                pad = np.zeros((t - chunk.shape[0], k, q), dtype=np.uint8)
+                chunk = np.concatenate([chunk, pad], axis=0)
+            gid = f"g{g0 // t}"
+            matrix = np.asarray(self.codec.encode(chunk))
+            self.store.put_group(gid, matrix)
+            members = []
+            for r in range(min(t, num - g0)):
+                oid = g0 + r
+                self._objects[oid] = (gid, r)
+                self._expected[oid] = np.asarray(objects[oid])
+                members.append(oid)
+            self._groups[gid] = members
+
+    # -- serving ----------------------------------------------------------------
+    def serve(
+        self,
+        requests: list[Request],
+        failures: list[FailureEvent] | None = None,
+    ) -> GatewayReport:
+        report = GatewayReport()
+        cfg = self.config
+        failures = sorted(failures or [], key=lambda f: f.time)
+        reqs = sorted(requests, key=lambda r: r.time)
+        repair_queue: list[tuple[float, int]] = []  # (time, node)
+
+        fi = 0
+        batch: list[Request] = []
+        batch_deadline = None
+
+        def boundary_events(now: float | None):
+            """Apply failure / repair events due before ``now`` (None =>
+            all remaining), flushing the open batch first."""
+            nonlocal fi, batch, batch_deadline
+            while True:
+                next_fail = failures[fi].time if fi < len(failures) else None
+                next_rep = repair_queue[0][0] if repair_queue else None
+                cands = [t for t in (next_fail, next_rep) if t is not None]
+                if not cands:
+                    return
+                t_evt = min(cands)
+                if now is not None and t_evt > now:
+                    return
+                if batch and batch_deadline is not None:
+                    self._flush(batch, report)
+                    batch, batch_deadline = [], None
+                if next_fail is not None and t_evt == next_fail:
+                    evt = failures[fi]
+                    fi += 1
+                    self.store.fail_nodes([evt.node])
+                    if cfg.repair_on_failure:
+                        repair_queue.append((evt.time + cfg.repair_delay, evt.node))
+                        repair_queue.sort()
+                else:
+                    t_rep, _node = repair_queue.pop(0)
+                    self._background_repair(t_rep, report)
+
+        for req in reqs:
+            boundary_events(req.time)
+            if req.kind == "put":
+                # PUT is a window barrier: it mutates blocks and parity,
+                # which must not interleave with an open window's planned
+                # (and cache-pinned) reads.
+                if batch:
+                    self._flush(batch, report)
+                    batch, batch_deadline = [], None
+                report.records.append(self._handle_put(req))
+                continue
+            if batch and req.time > batch_deadline:
+                self._flush(batch, report)
+                batch, batch_deadline = [], None
+            if not batch:
+                batch_deadline = req.time + cfg.batch_window
+            batch.append(req)
+        if batch:
+            self._flush(batch, report)
+            batch, batch_deadline = [], None
+        boundary_events(None)
+        return report
+
+    # -- request batch execution ------------------------------------------------
+    def _flush(self, batch: list[Request], report: GatewayReport) -> None:
+        gets: list[tuple[Request, ReadPlan]] = []
+        # Blocks whose plans depend on the CACHE copy (store copy is
+        # gone) are pinned at plan time — later fetches in this window
+        # may otherwise evict them before their request executes.
+        pinned: dict[BlockKey, np.ndarray] = {}
+        for req in batch:
+            # serve() handles PUTs as window barriers before batching;
+            # a PUT inside a window would break the pin/plan invariants
+            assert req.kind == "get", f"batch may only hold GETs, got {req.kind}"
+            if req.object_id not in self._objects:
+                report.records.append(
+                    RequestRecord(req.time, req.object_id, "get", None, False, 0, 0, 0)
+                )
+                continue
+            gid, row = self._objects[req.object_id]
+            self._clock = req.time
+            try:
+                plan = self.planner.plan(gid, row)
+            except UnreadableObjectError:
+                report.records.append(
+                    RequestRecord(req.time, req.object_id, "get", None, True, 0, 0, 0)
+                )
+                continue
+            if self.cache is not None:
+                for key in plan.source_keys:
+                    if key not in pinned and not self.store.available(key):
+                        blk = self.cache.get(key)
+                        if blk is not None:
+                            pinned[key] = blk
+            gets.append((req, plan))
+        if not gets:
+            return
+
+        # 1) fabric: fetch every needed block to the request's client port
+        ready: list[dict[BlockKey, float]] = []
+        bytes_read: list[int] = []
+        cache_hits: list[int] = []
+        fetched: dict[BlockKey, np.ndarray] = {}
+        for i, (req, plan) in enumerate(gets):
+            client = self._client_port(req)
+            key_ready: dict[BlockKey, float] = {}
+            nbytes = 0
+            hits = 0
+            for key in plan.source_keys:
+                blk = pinned.get(key)
+                if blk is None and self.cache is not None:
+                    blk = self.cache.get(key)
+                if blk is not None:
+                    key_ready[key] = req.time
+                    hits += 1
+                else:
+                    blk = self.store.get(key)
+                    end = self.sim.transfer(
+                        Transfer(
+                            self.store.node_of(key),
+                            client,
+                            blk.nbytes,
+                            req.time,
+                            priority=FOREGROUND,
+                        )
+                    )
+                    key_ready[key] = end
+                    nbytes += blk.nbytes
+                    if self.cache is not None:
+                        self.cache.put(key, blk)
+                fetched[key] = blk
+            ready.append(key_ready)
+            bytes_read.append(nbytes)
+            cache_hits.append(hits)
+
+        # 2) coalesced decode: dedup identical reconstructions (a hot
+        # degraded object appears once per window, not once per request),
+        # then one launch per shape bucket
+        unique_idx: dict[tuple, int] = {}
+        uops = []
+        owners: list[list[int]] = []
+        for i, (_req, plan) in enumerate(gets):
+            for op in plan.decodes:
+                okey = (op.group_id, op.row, op.kind, op.targets, op.sources)
+                j = unique_idx.get(okey)
+                if j is None:
+                    j = len(uops)
+                    unique_idx[okey] = j
+                    uops.append(op)
+                    owners.append([])
+                owners[j].append(i)
+        results, window_compute = self.coalescer.execute(
+            uops, lambda k: fetched[k]
+        )
+        # all sources of a bucket must land before its shared launch runs
+        bucket_ready: dict[tuple, float] = {}
+        for j, op in enumerate(uops):
+            t_src = max(ready[i][s] for i in owners[j] for s in op.sources)
+            key = op.shape_key
+            bucket_ready[key] = max(bucket_ready.get(key, 0.0), t_src)
+        decode_done = {
+            key: t + window_compute for key, t in bucket_ready.items()
+        }
+
+        # 3) assemble + verify + record
+        decoded_per_req: list[dict[int, np.ndarray]] = [dict() for _ in gets]
+        for j, op in enumerate(uops):
+            for i in owners[j]:
+                decoded_per_req[i].update(results[j])
+        for i, (req, plan) in enumerate(gets):
+            done = req.time
+            for key in plan.direct:
+                done = max(done, ready[i][key])
+            for op in plan.decodes:
+                done = max(done, decode_done[op.shape_key])
+            if self.config.verify:
+                self._verify_get(req, plan, fetched, decoded_per_req[i])
+            if self.cache is not None:
+                gid, row = self._objects[req.object_id]
+                for col, blk in decoded_per_req[i].items():
+                    self.cache.put((gid, row, col), blk)
+            report.records.append(
+                RequestRecord(
+                    req.time,
+                    req.object_id,
+                    "get",
+                    done - req.time,
+                    plan.degraded,
+                    bytes_read[i],
+                    plan.reconstruction_blocks,
+                    cache_hits[i],
+                )
+            )
+
+    # -- PUT --------------------------------------------------------------------
+    def _handle_put(self, req: Request) -> RequestRecord:
+        """Overwrite one object (one CORE row) in place: re-encode the row
+        RS codeword and XOR-delta the vertical parity row (linearity of
+        both codes — no other row is touched)."""
+        oid = req.object_id
+        if oid not in self._objects:
+            return RequestRecord(req.time, oid, "put", None, False, 0, 0, 0)
+        gid, row = self._objects[oid]
+        q = self._block_bytes
+        rng = np.random.default_rng((oid * 1_000_003 + int(req.time * 1e6)) % (2**63))
+        new_data = rng.integers(0, 256, (self.code.k, q), dtype=np.uint8)
+        new_row = np.asarray(self.code.horizontal.encode(new_data))  # (n, q)
+        # Delta against the re-encoded OLD row (ground truth), not the
+        # stored block — a lost old block must still contribute its delta
+        # or the vertical parity goes stale for the whole column.
+        old_row = np.asarray(self.code.horizontal.encode(self._expected[oid]))
+        client = self._client_port(req)
+        nbytes = 0
+        done = req.time
+        parity_row = self.code.rows - 1
+        for c in range(self.code.n):
+            old_key = (gid, row, c)
+            par_key = (gid, parity_row, c)
+            # a lost parity column is reconciled later by repair instead
+            if self.store.available(par_key):
+                delta = np.bitwise_xor(old_row[c], new_row[c])
+                self.store.put_block(
+                    par_key, np.bitwise_xor(self.store.blocks[par_key], delta)
+                )
+                end = self.sim.transfer(
+                    Transfer(
+                        client,
+                        self.store.node_of(par_key),
+                        int(q),
+                        req.time,
+                        priority=FOREGROUND,
+                    )
+                )
+                done = max(done, end)
+                nbytes += q
+            self.store.put_block(old_key, new_row[c])
+            end = self.sim.transfer(
+                Transfer(
+                    client,
+                    self.store.node_of(old_key),
+                    int(q),
+                    req.time,
+                    priority=FOREGROUND,
+                )
+            )
+            done = max(done, end)
+            nbytes += q
+            if self.cache is not None:
+                self.cache.invalidate(old_key)
+                self.cache.invalidate(par_key)
+            # a client write supersedes any in-flight repair write-back
+            self._healing.pop(old_key, None)
+            self._healing.pop(par_key, None)
+        self._expected[oid] = new_data
+        return RequestRecord(
+            req.time, oid, "put", done - req.time, False, nbytes, 0, 0
+        )
+
+    # -- background repair -------------------------------------------------------
+    def _background_repair(self, at_time: float, report: GatewayReport) -> None:
+        self.fixer.not_before = at_time
+        for gid in self._groups:
+            missing = [
+                (gid, r, c)
+                for r in range(self.code.rows)
+                for c in range(self.code.n)
+                if not self.store.available((gid, r, c))
+            ]
+            if not missing:
+                continue
+            report.repair_reports.append(self.fixer.fix_group(gid))
+            # repaired blocks stay invisible to reads until the repair's
+            # background transfers actually complete on the fabric
+            done = self.sim.class_makespan.get(BACKGROUND, at_time)
+            for key in missing:
+                if self.store.available(key):
+                    self._healing[key] = done
+
+    # -- helpers ----------------------------------------------------------------
+    def _client_port(self, req: Request) -> int:
+        # negative node ids: client NICs outside the storage cluster
+        return -(1 + (req.object_id % self.config.num_client_ports))
+
+    def _verify_get(self, req, plan, fetched, decoded) -> None:
+        gid, row = self._objects[req.object_id]
+        got = []
+        for c in range(self.code.k):
+            key = (gid, row, c)
+            if key in fetched and c not in decoded:
+                got.append(fetched[key])
+            else:
+                got.append(decoded[c])
+        got = np.stack(got)
+        want = self._expected[req.object_id]
+        if not np.array_equal(got, want):
+            raise AssertionError(
+                f"GET integrity failure for object {req.object_id}"
+            )

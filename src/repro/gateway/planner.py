@@ -1,0 +1,154 @@
+"""Per-request degraded-read planning (the paper's Table 1 cost model,
+applied online).
+
+A GET for object ``row`` of a group needs its k data blocks. For each
+missing data block the gateway can reconstruct either
+
+  * vertically  — XOR of the t surviving blocks of its COLUMN (needs the
+    whole column minus this row intact): t source blocks, and
+  * horizontally — RS decode over k surviving blocks of its ROW: k
+    source blocks, but ONE decode covers every missing block of the row.
+
+The planner sees the live failure set and picks the cheapest total plan:
+all-vertical costs t per missing block; one horizontal decode costs k
+for any number of missing blocks; if any column is broken the horizontal
+path is forced. Plans carry host-side coefficient matrices so the
+coalescer can batch decodes across concurrent requests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.product_code import CoreCode
+from repro.storage.blockstore import BlockKey, BlockStore
+
+
+class UnreadableObjectError(RuntimeError):
+    """Neither the vertical nor the horizontal path can serve the read."""
+
+
+@dataclass(frozen=True)
+class DecodeOp:
+    """One reconstruction: targets = coeffs @ sources (GF(256)), or a
+    plain XOR over sources when kind == "V" (coeffs is None)."""
+
+    kind: str  # "V" | "H"
+    group_id: str
+    row: int
+    targets: tuple[int, ...]  # data columns this op regenerates
+    sources: tuple[BlockKey, ...]
+    coeffs: np.ndarray | None  # (len(targets), len(sources)) for "H"
+
+    @property
+    def shape_key(self) -> tuple:
+        """Decode-shape bucket: ops sharing this key can share one
+        batched kernel launch."""
+        return (self.kind, len(self.targets), len(self.sources))
+
+
+@dataclass(frozen=True)
+class ReadPlan:
+    group_id: str
+    row: int
+    direct: tuple[BlockKey, ...]  # available data blocks, fetched as-is
+    decodes: tuple[DecodeOp, ...]
+
+    @property
+    def degraded(self) -> bool:
+        return bool(self.decodes)
+
+    @property
+    def source_keys(self) -> tuple[BlockKey, ...]:
+        """All distinct blocks the plan touches (direct + decode inputs)."""
+        seen: dict[BlockKey, None] = dict.fromkeys(self.direct)
+        for op in self.decodes:
+            seen.update(dict.fromkeys(op.sources))
+        return tuple(seen)
+
+    @property
+    def reconstruction_blocks(self) -> int:
+        """Source blocks consumed by reconstruction — the paper's Table 1
+        traffic figure (t per vertical repair, k per horizontal decode)."""
+        return sum(len(op.sources) for op in self.decodes)
+
+
+class DegradedReadPlanner:
+    def __init__(self, store: BlockStore, code: CoreCode, available_fn=None):
+        """``available_fn(key) -> bool`` overrides raw store availability —
+        the gateway passes "in the store OR in the block cache" so cached
+        reconstructions short-circuit replanning."""
+        self.store = store
+        self.code = code
+        self._available = available_fn if available_fn is not None else store.available
+
+    def plan(self, group_id: str, row: int) -> ReadPlan:
+        code = self.code
+        k, n = code.k, code.n
+        avail_data = [
+            c for c in range(k) if self._available((group_id, row, c))
+        ]
+        missing = [c for c in range(k) if c not in avail_data]
+        direct = tuple((group_id, row, c) for c in avail_data)
+        if not missing:
+            return ReadPlan(group_id, row, direct, ())
+
+        vertical_ok = all(self._column_intact(group_id, row, c) for c in missing)
+        avail_row = [
+            c for c in range(n) if self._available((group_id, row, c))
+        ]
+        horizontal_ok = len(avail_row) >= k
+
+        # Table 1: vertical = t reads per block, horizontal = k reads for
+        # the whole row. Prefer vertical on ties (pure XOR vs GF decode).
+        v_cost = code.t * len(missing)
+        if vertical_ok and (not horizontal_ok or v_cost <= k):
+            decodes = tuple(
+                self._vertical_op(group_id, row, c) for c in missing
+            )
+            return ReadPlan(group_id, row, direct, decodes)
+        if horizontal_ok:
+            return ReadPlan(
+                group_id, row, direct, (self._horizontal_op(group_id, row, avail_row, missing),)
+            )
+        if vertical_ok:
+            decodes = tuple(
+                self._vertical_op(group_id, row, c) for c in missing
+            )
+            return ReadPlan(group_id, row, direct, decodes)
+        raise UnreadableObjectError(
+            f"object ({group_id}, row {row}): columns {missing} broken and "
+            f"only {len(avail_row)} < k={k} row blocks survive"
+        )
+
+    # -- helpers ---------------------------------------------------------------
+    def _column_intact(self, group_id: str, row: int, col: int) -> bool:
+        return all(
+            self._available((group_id, r, col))
+            for r in range(self.code.rows)
+            if r != row
+        )
+
+    def _vertical_op(self, group_id: str, row: int, col: int) -> DecodeOp:
+        sources = tuple(
+            (group_id, r, col) for r in range(self.code.rows) if r != row
+        )
+        return DecodeOp("V", group_id, row, (col,), sources, None)
+
+    def _horizontal_op(
+        self, group_id: str, row: int, avail_row: list[int], missing: list[int]
+    ) -> DecodeOp:
+        # Prefer the available data columns as sources — the GET fetches
+        # them anyway, so total distinct blocks stays at k (Table 1).
+        preferred = [c for c in avail_row if c < self.code.k] + [
+            c for c in avail_row if c >= self.code.k
+        ]
+        row_ids, coeffs = self.code.horizontal.repair_matrix(
+            np.asarray(preferred), np.asarray(missing)
+        )
+        sources = tuple((group_id, row, int(c)) for c in row_ids)
+        return DecodeOp(
+            "H", group_id, row, tuple(missing), sources, np.asarray(coeffs)
+        )

@@ -1,0 +1,76 @@
+"""Workload synthesis for the serving gateway.
+
+Object popularity is Zipfian (rank-r probability ∝ r^-s over a finite
+catalog — the shape measured for blob/photo stores and the warehouse
+traces the paper's related work studies), arrivals are Poisson, and node
+failures are injected at configurable times. Everything is generated
+host-side with numpy from a single seed so runs are reproducible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Request:
+    time: float  # arrival (seconds since epoch 0 of the trace)
+    object_id: int
+    kind: str = "get"  # get | put
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    time: float
+    node: int
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    num_objects: int
+    num_requests: int
+    arrival_rate: float = 200.0  # requests/sec (Poisson)
+    zipf_s: float = 1.1  # popularity exponent
+    put_fraction: float = 0.0  # fraction of requests that are PUTs
+    seed: int = 0
+
+
+def zipf_probs(num_objects: int, s: float) -> np.ndarray:
+    """Finite-catalog Zipf pmf: p(rank r) ∝ r^-s, r = 1..num_objects."""
+    ranks = np.arange(1, num_objects + 1, dtype=np.float64)
+    w = ranks**-s
+    return w / w.sum()
+
+
+def generate_requests(cfg: WorkloadConfig) -> list[Request]:
+    rng = np.random.default_rng(cfg.seed)
+    gaps = rng.exponential(1.0 / cfg.arrival_rate, size=cfg.num_requests)
+    times = np.cumsum(gaps)
+    # Popular ranks are mapped to shuffled object ids so popularity is not
+    # correlated with placement order.
+    perm = rng.permutation(cfg.num_objects)
+    ranks = rng.choice(cfg.num_objects, size=cfg.num_requests, p=zipf_probs(cfg.num_objects, cfg.zipf_s))
+    kinds = np.where(rng.random(cfg.num_requests) < cfg.put_fraction, "put", "get")
+    return [
+        Request(time=float(times[i]), object_id=int(perm[ranks[i]]), kind=str(kinds[i]))
+        for i in range(cfg.num_requests)
+    ]
+
+
+def plan_failures(
+    num_failures: int,
+    num_nodes: int,
+    at_time: float = 0.0,
+    spacing: float = 0.0,
+    seed: int = 0,
+) -> list[FailureEvent]:
+    """Pick ``num_failures`` distinct victim nodes; fail the first at
+    ``at_time`` and each subsequent one ``spacing`` seconds later."""
+    rng = np.random.default_rng(seed + 7919)
+    victims = rng.choice(num_nodes, size=num_failures, replace=False)
+    return [
+        FailureEvent(time=at_time + i * spacing, node=int(v))
+        for i, v in enumerate(victims)
+    ]

@@ -3,6 +3,22 @@
 # (bit-plane GF multiply on the VPU; no MXU mapping exists for field
 # arithmetic).
 from repro.kernels import ops, ref
-from repro.kernels.ops import gf256_matmul, rs_decode, rs_encode, xor_parity
+from repro.kernels.ops import (
+    gf256_matmul,
+    gf256_matmul_batched,
+    rs_decode,
+    rs_encode,
+    xor_parity,
+    xor_parity_batched,
+)
 
-__all__ = ["ops", "ref", "gf256_matmul", "rs_decode", "rs_encode", "xor_parity"]
+__all__ = [
+    "ops",
+    "ref",
+    "gf256_matmul",
+    "gf256_matmul_batched",
+    "rs_decode",
+    "rs_encode",
+    "xor_parity",
+    "xor_parity_batched",
+]

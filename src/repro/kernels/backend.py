@@ -1,0 +1,20 @@
+"""Shared backend detection for the Pallas kernels.
+
+``interpret=None`` everywhere in the kernel stack means "auto": run the
+kernel body under the Pallas CPU interpreter unless a real TPU backend is
+attached, in which case compile it. Kept in its own tiny module so both
+the raw kernels (gf256_matmul, xor_parity) and the public wrappers (ops)
+can share one resolution point without an import cycle.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return _interpret_default() if interpret is None else interpret

@@ -36,6 +36,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.coding import gf256
+from repro.kernels.backend import resolve_interpret
 
 DEFAULT_BLOCK_N = 32768
 
@@ -101,18 +102,21 @@ def gf256_matmul_planes(
     data: jnp.ndarray,
     *,
     block_n: int = DEFAULT_BLOCK_N,
-    interpret: bool = True,
+    interpret: bool | None = None,
     packed: bool = False,
 ) -> jnp.ndarray:
     """C (M, N) = coefficient-matrix x data over GF(2^8).
 
     mc: (M, K, 8) bit-plane constants (see expand_coeff_bitplanes)
     data: (K, N) uint8; N must be a multiple of block_n (ops.py pads).
-    packed selects the u32 mask-spread kernel (K2) — structurally
-    ~2x fewer VPU lane-ops on TPU, but slower under the CPU interpreter
-    (bitcast overhead), so the measured-on-this-host default is False;
-    flip it on real TPU (EXPERIMENTS.md §Perf K2).
+    interpret=None auto-detects the backend (compile on TPU, interpret
+    elsewhere — kernels/backend.py). packed selects the u32 mask-spread
+    kernel (K2) — structurally ~2x fewer VPU lane-ops on TPU, but slower
+    under the CPU interpreter (bitcast overhead), so the
+    measured-on-this-host default is False; flip it on real TPU
+    (EXPERIMENTS.md §Perf K2).
     """
+    interpret = resolve_interpret(interpret)
     m, kk, _ = mc.shape
     k2, n = data.shape
     assert kk == k2, (mc.shape, data.shape)
@@ -130,3 +134,34 @@ def gf256_matmul_planes(
         out_specs=pl.BlockSpec((m, block_n), lambda j: (0, j)),
         interpret=interpret,
     )(mc, data)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "packed")
+)
+def gf256_matmul_planes_batched(
+    mc: jnp.ndarray,
+    data: jnp.ndarray,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool | None = None,
+    packed: bool = False,
+) -> jnp.ndarray:
+    """Stacked decode: (B, M, K, 8) bit-planes x (B, K, N) data -> (B, M, N).
+
+    One launch serves B independent stripes that share a decode *shape*
+    but not coefficients — the gateway coalescer's case: concurrent
+    degraded reads each need their own repair matrix (their failure sets
+    differ) over same-sized blocks. vmap over the single-stripe kernel
+    folds the batch into an extra Pallas grid dimension, so the whole
+    batch is a single kernel launch instead of B dispatches.
+    """
+    interpret = resolve_interpret(interpret)
+    b, m, kk, _ = mc.shape
+    b2, k2, n = data.shape
+    assert b == b2 and kk == k2, (mc.shape, data.shape)
+    assert n % block_n == 0, (n, block_n)
+    fn = functools.partial(
+        gf256_matmul_planes, block_n=block_n, interpret=interpret, packed=packed
+    )
+    return jax.vmap(fn)(mc, data)

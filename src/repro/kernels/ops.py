@@ -8,18 +8,12 @@ kernel body in Python on CPU; on a real TPU backend pass
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import gf256_matmul as _gfk
 from repro.kernels import xor_parity as _xpk
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.backend import resolve_interpret
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> tuple[jnp.ndarray, int]:
@@ -44,8 +38,7 @@ def gf256_matmul(
     ``coef`` is a host-side numpy matrix (generator/repair coefficients);
     its bit-plane expansion happens at trace time and is constant-folded.
     """
-    if interpret is None:
-        interpret = _interpret_default()
+    interpret = resolve_interpret(interpret)
     n = data.shape[-1]
     if block_n is None:
         block_n = min(_gfk.DEFAULT_BLOCK_N, _next_pow2(n))
@@ -60,8 +53,7 @@ def xor_parity(
     data: jnp.ndarray, *, block_n: int | None = None, interpret: bool | None = None
 ) -> jnp.ndarray:
     """data (T, N) uint8 -> (N,) XOR over rows, Pallas-backed."""
-    if interpret is None:
-        interpret = _interpret_default()
+    interpret = resolve_interpret(interpret)
     n = data.shape[-1]
     if block_n is None:
         block_n = min(_xpk.DEFAULT_BLOCK_N, _next_pow2(n))
@@ -69,6 +61,48 @@ def xor_parity(
     data_p, orig_n = _pad_to(data, block_n, axis=-1)
     out = _xpk.xor_parity(data_p, block_n=block_n, interpret=interpret)
     return out[:orig_n]
+
+
+def gf256_matmul_batched(
+    coefs: np.ndarray,
+    data: jnp.ndarray,
+    *,
+    block_n: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Stacked decode: out (B, M, N) = coefs (B, M, K) @ data (B, K, N),
+    each batch element an independent GF(2^8) product, in ONE kernel
+    launch (the gateway coalescer's batched degraded-read decode).
+
+    ``coefs`` is host-side numpy (per-stripe repair/decode matrices);
+    bit-plane expansion happens at trace time and is constant-folded.
+    """
+    interpret = resolve_interpret(interpret)
+    n = data.shape[-1]
+    if block_n is None:
+        block_n = min(_gfk.DEFAULT_BLOCK_N, _next_pow2(n))
+    coefs = np.asarray(coefs, dtype=np.uint8)
+    mc = jnp.asarray(np.stack([_gfk.expand_coeff_bitplanes(c) for c in coefs]))
+    data = data.astype(jnp.uint8)
+    data_p, orig_n = _pad_to(data, block_n, axis=-1)
+    out = _gfk.gf256_matmul_planes_batched(
+        mc, data_p, block_n=block_n, interpret=interpret
+    )
+    return out[..., :orig_n]
+
+
+def xor_parity_batched(
+    data: jnp.ndarray, *, block_n: int | None = None, interpret: bool | None = None
+) -> jnp.ndarray:
+    """data (B, T, N) uint8 -> (B, N): batched XOR over rows, one launch."""
+    interpret = resolve_interpret(interpret)
+    n = data.shape[-1]
+    if block_n is None:
+        block_n = min(_xpk.DEFAULT_BLOCK_N, _next_pow2(n))
+    data = data.astype(jnp.uint8)
+    data_p, orig_n = _pad_to(data, block_n, axis=-1)
+    out = _xpk.xor_parity_batched(data_p, block_n=block_n, interpret=interpret)
+    return out[..., :orig_n]
 
 
 def rs_encode(parity_matrix: np.ndarray, data: jnp.ndarray, **kw) -> jnp.ndarray:

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 DEFAULT_BLOCK_N = 65536
 
 
@@ -31,9 +33,12 @@ def _xor_kernel(data_ref, out_ref, *, t: int):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def xor_parity(
-    data: jnp.ndarray, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True
+    data: jnp.ndarray, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool | None = None
 ) -> jnp.ndarray:
-    """data: (T, N) uint8 -> (N,) XOR of rows. N % block_n == 0."""
+    """data: (T, N) uint8 -> (N,) XOR of rows. N % block_n == 0.
+
+    interpret=None auto-detects the backend (kernels/backend.py)."""
+    interpret = resolve_interpret(interpret)
     t, n = data.shape
     assert n % block_n == 0, (n, block_n)
     out = pl.pallas_call(
@@ -45,3 +50,17 @@ def xor_parity(
         interpret=interpret,
     )(data)
     return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def xor_parity_batched(
+    data: jnp.ndarray, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool | None = None
+) -> jnp.ndarray:
+    """data: (B, T, N) uint8 -> (B, N): B independent vertical repairs in
+    one launch (vmap folds the batch into the Pallas grid). The gateway
+    coalescer's vertical fast path."""
+    interpret = resolve_interpret(interpret)
+    b, t, n = data.shape
+    assert n % block_n == 0, (n, block_n)
+    fn = functools.partial(xor_parity, block_n=block_n, interpret=interpret)
+    return jax.vmap(fn)(data)

@@ -40,7 +40,7 @@ def main(argv=None) -> int:
     import jax
 
     from repro.configs import get_config
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, mesh_context
     from repro.train import optimizer as opt
     from repro.train.loop import LoopConfig, Trainer
 
@@ -61,7 +61,7 @@ def main(argv=None) -> int:
     oc = opt.OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
                        decay_steps=args.steps, quantize_v=args.quantize_v)
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else None
+    ctx = mesh_context(mesh) if mesh is not None else None
     try:
         if ctx is not None:
             ctx.__enter__()

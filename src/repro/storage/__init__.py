@@ -1,11 +1,19 @@
 from repro.storage.blockstore import BlockKey, BlockStore, PlacementError
-from repro.storage.netmodel import ClusterProfile, NetSimulator, Transfer
+from repro.storage.netmodel import (
+    BACKGROUND,
+    FOREGROUND,
+    ClusterProfile,
+    NetSimulator,
+    Transfer,
+)
 from repro.storage.repair import BlockFixer, RepairReport, UnrecoverableError
 
 __all__ = [
     "BlockKey",
     "BlockStore",
     "PlacementError",
+    "BACKGROUND",
+    "FOREGROUND",
     "ClusterProfile",
     "NetSimulator",
     "Transfer",

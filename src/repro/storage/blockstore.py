@@ -11,6 +11,7 @@ Data lives in host numpy (this is the "disk"); codec math runs in JAX.
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -42,7 +43,9 @@ class BlockStore:
         for its 20-node clusters."""
         need = rows * cols
         alive = [n for n in range(self.num_nodes) if n not in self.failed_nodes]
-        offset = (hash(group_id) ^ self._group_counter) % len(alive)
+        # crc32, not hash(): placement must be stable across processes
+        # (PYTHONHASHSEED randomizes str hashes per run)
+        offset = (zlib.crc32(group_id.encode()) ^ self._group_counter) % len(alive)
         self._group_counter += 1
         if need <= len(alive):
             chosen = [alive[(offset + i) % len(alive)] for i in range(need)]

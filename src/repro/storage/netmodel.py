@@ -33,32 +33,63 @@ class ClusterProfile:
         return cls(name="computation-critical", node_bandwidth=250e6, compute_scale=8.0)
 
 
+# Priority classes for fabric sharing. Foreground (client reads) always
+# runs at full link speed; background (repair/rebalance) may be throttled
+# to a fraction of the link so client traffic keeps headroom — the knob
+# every production repair pipeline exposes (HDFS-RAID's RaidNode caps,
+# Ceph's osd_recovery_max_active etc.).
+FOREGROUND = 0
+BACKGROUND = 1
+
+
 @dataclass
 class Transfer:
     src_node: int
     dst_node: int
     nbytes: int
     not_before: float = 0.0  # dependency: source block exists at this time
+    priority: int = FOREGROUND
 
 
 @dataclass
 class NetSimulator:
-    """Event-ordered per-node bandwidth simulator.
+    """Event-ordered per-node bandwidth simulator with priority classes.
 
     Each node has unit-bandwidth send and receive ports; a transfer
     occupies both for nbytes / bandwidth seconds, starting no earlier
-    than its dependency time and when both ports are free.
+    than its dependency time and when both ports are free. Foreground
+    and background transfers share the SAME port timelines — repair
+    traffic and client reads contend on one fabric instead of running in
+    separate universes — and background transfers additionally run at
+    ``background_share`` of the link rate.
+
+    Per-class byte/busy accounting feeds the gateway's interference
+    metrics (how much repair slows reads and vice versa).
     """
 
     profile: ClusterProfile
+    background_share: float = 1.0  # fraction of link rate for priority > 0
     send_free: dict[int, float] = field(default_factory=dict)
     recv_free: dict[int, float] = field(default_factory=dict)
     total_bytes: int = 0
     makespan: float = 0.0
+    class_bytes: dict[int, int] = field(default_factory=dict)
+    class_busy: dict[int, float] = field(default_factory=dict)
+    class_makespan: dict[int, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        # share 0 would mean "repair paused" — this event model cannot
+        # express it (every scheduled transfer must complete)
+        if not 0.0 < self.background_share <= 1.0:
+            raise ValueError(
+                f"background_share must be in (0, 1], got {self.background_share}"
+            )
 
     def transfer(self, t: Transfer) -> float:
         """Schedule a transfer; returns its completion time (seconds)."""
         bw = self.profile.node_bandwidth
+        if t.priority != FOREGROUND:
+            bw *= self.background_share
         start = max(
             t.not_before,
             self.send_free.get(t.src_node, 0.0),
@@ -70,4 +101,9 @@ class NetSimulator:
         self.recv_free[t.dst_node] = end
         self.total_bytes += t.nbytes
         self.makespan = max(self.makespan, end)
+        self.class_bytes[t.priority] = self.class_bytes.get(t.priority, 0) + t.nbytes
+        self.class_busy[t.priority] = self.class_busy.get(t.priority, 0.0) + dur
+        self.class_makespan[t.priority] = max(
+            self.class_makespan.get(t.priority, 0.0), end
+        )
         return end

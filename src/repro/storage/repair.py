@@ -65,10 +65,34 @@ class BlockFixer:
     profile: ClusterProfile
     mode: str = "core"  # hdfs_raid | hdfs_raid_opt | core
     scheduler: str = "rgs"  # row_first | column_first | rgs
+    # Optional shared fabric: when ``sim`` is set, repair transfers are
+    # scheduled on that simulator (at ``priority``) instead of a private
+    # one, so they contend with whatever else rides the fabric — the
+    # gateway runs repair as BACKGROUND here while client reads go
+    # FOREGROUND on the same NetSimulator.
+    sim: NetSimulator | None = None
+    priority: int = 0
+    not_before: float = 0.0  # earliest start (failure-detection time)
 
     def __post_init__(self):
         self.codec = CoreCodec(self.code)
         self._timed = 0.0
+
+    def _sim(self) -> NetSimulator:
+        sim = self.sim if self.sim is not None else NetSimulator(self.profile)
+        # Baseline for duration accounting: on a shared fabric the class
+        # makespan is cumulative across calls, so each call reports only
+        # its own extension of it.
+        self._net_baseline = sim.class_makespan.get(self.priority, 0.0)
+        return sim
+
+    def _net_time(self, sim: NetSimulator) -> float:
+        end = sim.class_makespan.get(self.priority, 0.0)
+        if self.sim is None:
+            return end
+        # shared fabric: duration of THIS repair, not the absolute clock
+        start = max(self._net_baseline, self.not_before)
+        return max(0.0, end - start)
 
     # -- timed codec ops ------------------------------------------------------
     def _measure(self, fn, *args):
@@ -105,7 +129,7 @@ class BlockFixer:
     def _fix_raid(self, group_id: str, rows: int, cols: int, optimized: bool) -> RepairReport:
         """Row-by-row (per-stripe) RS repair, no cross-object parity use."""
         report = RepairReport(mode="hdfs_raid_opt" if optimized else "hdfs_raid")
-        sim = NetSimulator(self.profile)
+        sim = self._sim()
         sched_desc = []
         for r in range(rows):
             failed = [c for c in range(cols) if not self.store.available((group_id, r, c))]
@@ -134,7 +158,18 @@ class BlockFixer:
                 ready = 0.0
                 for c in fetch_cols:
                     src = self.store.node_of((group_id, r, c))
-                    ready = max(ready, sim.transfer(Transfer(src, dst, blocks[0].nbytes)))
+                    ready = max(
+                        ready,
+                        sim.transfer(
+                            Transfer(
+                                src,
+                                dst,
+                                blocks[0].nbytes,
+                                self.not_before,
+                                priority=self.priority,
+                            )
+                        ),
+                    )
                 rep = self._horizontal_repair(
                     np.asarray(fetch_cols[: self.code.k]),
                     blocks[: self.code.k],
@@ -147,7 +182,7 @@ class BlockFixer:
                 report.bytes_fetched += sum(b.nbytes for b in blocks)
                 report.blocks_repaired += len(batch)
                 sched_desc.append(f"H{r}x{len(batch)}")
-        report.network_time = sim.makespan
+        report.network_time = self._net_time(sim)
         report.compute_time = self._timed
         report.schedule = ",".join(sched_desc)
         return report
@@ -158,7 +193,7 @@ class BlockFixer:
         fm = self.store.failure_matrix(group_id, rows, cols)
         if not fm.any():
             return report
-        sim = NetSimulator(self.profile)
+        sim = self._sim()
         descs = []
         block_ready: dict[tuple[int, int], float] = {}
         for cluster in independent_clusters(fm):
@@ -170,7 +205,7 @@ class BlockFixer:
             descs.append(sched.describe())
             for step in sched.steps:
                 self._execute_step(group_id, step, sim, block_ready, report)
-        report.network_time = sim.makespan
+        report.network_time = self._net_time(sim)
         report.compute_time = self._timed
         report.schedule = ";".join(descs)
         return report
@@ -193,7 +228,13 @@ class BlockFixer:
             ready = max(
                 ready,
                 sim.transfer(
-                    Transfer(src_node, dst, blocks[0].nbytes, block_ready.get((r, c), 0.0))
+                    Transfer(
+                        src_node,
+                        dst,
+                        blocks[0].nbytes,
+                        max(block_ready.get((r, c), 0.0), self.not_before),
+                        priority=self.priority,
+                    )
                 ),
             )
         if step.kind == "V":
@@ -208,7 +249,9 @@ class BlockFixer:
             # redistribution of extra regenerated blocks to their new homes
             if i > 0:
                 home = self.store.node_of((group_id, cell[0], cell[1]))
-                sim.transfer(Transfer(dst, home, rep[i].nbytes, ready))
+                sim.transfer(
+                    Transfer(dst, home, rep[i].nbytes, ready, priority=self.priority)
+                )
         report.blocks_fetched += len(srcs)
         report.bytes_fetched += int(blocks.nbytes)
         report.blocks_repaired += len(step.repairs)

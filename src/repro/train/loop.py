@@ -70,9 +70,14 @@ class Trainer:
             sspecs = ts.state_specs(self.cfg, self.api, self.ax, self.oc)
             bspecs = batch_specs(self.cfg, self.ax)
             self._state_shardings = named(sspecs)
+            # out_shardings pins the donated state to the same layout it
+            # came in with — otherwise GSPMD may pick a different output
+            # sharding and the next call's in_shardings check fails on
+            # jax versions without automatic reshard-on-mismatch.
             self.step_fn = jax.jit(
                 step_fn,
                 in_shardings=(self._state_shardings, named(bspecs)),
+                out_shardings=(self._state_shardings, None),
                 donate_argnums=(0,),
             )
         else:

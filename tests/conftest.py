@@ -1,0 +1,22 @@
+"""Shared pytest configuration.
+
+``hypothesis`` is an optional test dependency (no network in some
+environments, so it cannot always be installed). Modules that use it are
+skipped at collection time instead of erroring the whole collection run.
+The scan is content-based so new hypothesis-using test modules are
+covered automatically.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+
+collect_ignore: list[str] = []
+
+if importlib.util.find_spec("hypothesis") is None:
+    _here = pathlib.Path(__file__).parent
+    for _path in sorted(_here.glob("test_*.py")):
+        text = _path.read_text(encoding="utf-8", errors="ignore")
+        if "import hypothesis" in text or "from hypothesis" in text:
+            collect_ignore.append(_path.name)

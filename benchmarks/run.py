@@ -56,6 +56,11 @@ def main() -> int:
         print(f"\n=== benchmarks.{name} ({dt:.1f}s) " + "=" * 40)
         for r in rows:
             print(",".join(f"{k}={v}" for k, v in r.items()))
+        if hasattr(mod, "write_bench"):
+            # machine-readable perf snapshot (BENCH_<name>.json) so the
+            # trajectory is tracked across PRs
+            mod.write_bench(rows)
+            print(f"wrote {mod.BENCH_PATH}")
         if hasattr(mod, "check"):
             msgs = mod.check(rows)
             all_checks.extend(msgs)

@@ -4,9 +4,14 @@ The gateway is the client-facing layer over the simulated block store:
 a Zipf/Poisson request trace is planned per-request against the live
 failure set (vertical XOR at t blocks vs horizontal RS at k — the
 paper's Table 1), concurrent degraded reads sharing a decode shape are
-coalesced into single batched Pallas GF(256) launches, a small LRU
-cache absorbs hot reconstructions, and background repair contends with
-foreground reads on the same simulated fabric.
+coalesced into single batched Pallas GF(256) launches (batch sizes
+padded up a fixed ladder so the jit cache stays bounded, kernel
+parameters autotuned per backend), a small rebuild-cost-aware cache
+absorbs hot reconstructions, and background repair contends with
+foreground reads on the same simulated fabric — preemptively shared in
+fixed quanta, so a repair transfer cannot head-of-line-block a read.
+The serve path is the pipelined dataplane: window N+1's fetches overlap
+window N's decode launches on the simulated decode engine.
 
     PYTHONPATH=src python examples/gateway_serving.py
 """
@@ -67,7 +72,8 @@ def main():
           f"({report.reconstruction_blocks_per_degraded_get:.1f} reconstruction "
           f"blocks each; vertical costs t={code.t}, horizontal k={code.k})")
     print(f"  batched decode  {st.decode_ops:8d} reconstructions in "
-          f"{st.decode_calls} kernel launches (max batch {st.max_batch})")
+          f"{st.decode_calls} kernel launches (max batch {st.max_batch}, "
+          f"{st.jit_entries} jit entries)")
     print(f"  block cache     {gw.cache.stats.hits:8d} hits / "
           f"{gw.cache.stats.misses} misses ({gw.cache.stats.hit_rate:.0%})")
     print(f"  fabric          {gw.sim.class_bytes.get(0, 0)/1e6:8.1f} MB "

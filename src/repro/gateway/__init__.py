@@ -1,9 +1,11 @@
 # Client-facing object-storage serving layer over the simulated CORE
 # cluster: Zipf/Poisson workloads, per-request degraded-read planning
-# (paper Table 1), shape-bucketed batched GF(256) decode, LRU block
-# caching, and foreground/background fabric sharing with repair.
+# (paper Table 1), a pipelined fetch->decode->verify dataplane with
+# shape-bucketed batched GF(256) decode (ladder-padded, autotuned,
+# bounded jit cache), rebuild-cost-aware block caching, and preemptive
+# quantum fabric sharing between foreground reads and background repair.
 from repro.gateway.cache import CacheStats, LRUBlockCache
-from repro.gateway.coalescer import CoalescerStats, DecodeCoalescer
+from repro.gateway.coalescer import PAD_LADDER, CoalescerStats, DecodeCoalescer
 from repro.gateway.gateway import (
     GatewayConfig,
     GatewayReport,
@@ -28,6 +30,7 @@ from repro.gateway.workload import (
 __all__ = [
     "CacheStats",
     "LRUBlockCache",
+    "PAD_LADDER",
     "CoalescerStats",
     "DecodeCoalescer",
     "GatewayConfig",

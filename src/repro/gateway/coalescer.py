@@ -8,12 +8,28 @@ pays per-launch overhead B times; the stacked (B, M, K) x (B, K, N)
 Pallas entry (kernels/gf256_matmul.py) pays it once. Vertical XOR repairs
 batch the same way through the stacked xor_parity kernel.
 
+Recompilation control: the batch size B is a jit shape key, and organic
+traffic produces a different B almost every window — each one a fresh
+trace/compile. Batches are therefore padded up a fixed power-of-two
+ladder (PAD_LADDER) by replicating the first stripe, so the distinct
+traced signatures per decode shape stay logarithmic in the largest batch
+ever seen (<= len(PAD_LADDER)) instead of linear in traffic diversity.
+``stats.jit_entries`` counts live signatures so recompilation regressions
+are visible in GatewayReport and the benchmarks.
+
+Kernel parameters (block_n, packed u32 variant) come from the measured
+per-backend sweep in kernels/autotune.py, capped to the actual block
+size so ladder padding never multiplies kernel work.
+
 Compute time is measured on the real jitted kernels (block_until_ready)
-and scaled by the cluster profile, mirroring BlockFixer's convention.
+and scaled by the cluster profile, mirroring BlockFixer's convention —
+reported PER SHAPE BUCKET so the gateway's pipelined dataplane can issue
+each bucket's launch as soon as its own sources land.
 """
 
 from __future__ import annotations
 
+import bisect
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
@@ -24,19 +40,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.gateway.planner import DecodeOp
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.storage.blockstore import BlockKey
+
+# Batch-size rungs: B pads up to the next rung (powers of two). Buckets
+# larger than the top rung are SPLIT into top-rung launches, so the
+# distinct traced signatures per decode shape are truly <= len(PAD_LADDER).
+PAD_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def ladder_rung(b: int) -> int:
+    """Smallest ladder rung >= b. Callers cap b at PAD_LADDER[-1] first
+    (the coalescer splits oversized buckets into top-rung chunks)."""
+    assert 0 < b <= PAD_LADDER[-1], b
+    return PAD_LADDER[bisect.bisect_left(PAD_LADDER, b)]
 
 
 @dataclass
 class CoalescerStats:
     decode_ops: int = 0  # logical reconstructions requested
     decode_calls: int = 0  # actual kernel launches issued
+    padded_ops: int = 0  # ladder filler stripes launched (overhead)
     max_batch: int = 0
     compute_time: float = 0.0  # scaled seconds, cumulative
     batch_sizes: list[int] = field(default_factory=list)
     ops_by_kind: dict[str, int] = field(default_factory=dict)
     sources_by_kind: dict[str, int] = field(default_factory=dict)
+    jit_entries: int = 0  # distinct traced (shape, B, q) signatures
+    decode_shapes: int = 0  # distinct decode shape_keys ever launched
 
     @property
     def coalescing_ratio(self) -> float:
@@ -51,78 +82,120 @@ class CoalescerStats:
 
 
 class DecodeCoalescer:
-    def __init__(self, compute_scale: float = 1.0, interpret: bool | None = None):
+    def __init__(
+        self,
+        compute_scale: float = 1.0,
+        interpret: bool | None = None,
+        autotune_kernels: bool = True,
+    ):
         self.compute_scale = compute_scale
         self.interpret = interpret
+        self.autotune_kernels = autotune_kernels
         self.stats = CoalescerStats()
         self._warm: set[tuple] = set()  # traced (shape, B, q) signatures
+        self._tuned: dict[str, autotune.TunedKernel] = {}
+
+    def _tuned_for(self, kind: str) -> autotune.TunedKernel | None:
+        if not self.autotune_kernels:
+            return None
+        tuned = self._tuned.get(kind)
+        if tuned is None:
+            tune = autotune.tuned_xor if kind == "V" else autotune.tuned_gf256
+            tuned = tune(self.interpret)
+            self._tuned[kind] = tuned
+        return tuned
 
     def execute(
         self,
         decode_ops: list[DecodeOp],
         fetch: Callable[[BlockKey], np.ndarray],
-    ) -> tuple[list[dict[int, np.ndarray]], float]:
+    ) -> tuple[list[dict[int, np.ndarray]], dict[tuple, float]]:
         """Run all ``decode_ops``, batching by shape bucket.
 
-        Returns (results, compute_seconds) where results[i] maps target
+        Returns (results, bucket_compute) where results[i] maps target
         column -> reconstructed block for decode_ops[i], and
-        compute_seconds is the scaled wall time of this execution (all
-        ops in a window wait on the same launches).
+        bucket_compute maps each shape_key to the scaled wall time of
+        that bucket's launch — per-bucket so the pipelined gateway can
+        overlap one bucket's decode with another's fabric transfers
+        (the serial path just sums the values).
         """
         results: list[dict[int, np.ndarray]] = [dict() for _ in decode_ops]
+        bucket_compute: dict[tuple, float] = {}
         if not decode_ops:
-            return results, 0.0
+            return results, bucket_compute
         buckets: dict[tuple, list[int]] = defaultdict(list)
         for i, op in enumerate(decode_ops):
             buckets[op.shape_key].append(i)
-        window_compute = 0.0
-        for key, idxs in buckets.items():
+        for key, all_idxs in buckets.items():
             kind = key[0]
-            if kind == "V":
-                data = np.stack(
-                    [np.stack([fetch(s) for s in decode_ops[i].sources]) for i in idxs]
-                )  # (B, T, q)
-                launch = lambda: ops.xor_parity_batched(
-                    jnp.asarray(data), interpret=self.interpret
-                )
-            else:
-                coefs = np.stack([decode_ops[i].coeffs for i in idxs])  # (B, M, K)
-                data = np.stack(
-                    [np.stack([fetch(s) for s in decode_ops[i].sources]) for i in idxs]
-                )  # (B, K, q)
-                launch = lambda: ops.gf256_matmul_batched(
-                    coefs, jnp.asarray(data), interpret=self.interpret
-                )
-            # Untimed warm-up on first sight of a traced signature: the
-            # batch size B and byte length are jit shape keys, and the
-            # one-off trace/compile cost must not be billed to the
-            # window's simulated decode latency.
-            sig = (key, data.shape[0], data.shape[-1])
-            if sig not in self._warm:
-                jax.block_until_ready(launch())
-                self._warm.add(sig)
-            t0 = time.perf_counter()
-            out = launch()
-            jax.block_until_ready(out)
-            out = np.asarray(out)
-            if kind == "V":
-                for b, i in enumerate(idxs):  # out: (B, q)
-                    results[i][decode_ops[i].targets[0]] = out[b]
-            else:
-                for b, i in enumerate(idxs):  # out: (B, M, q)
-                    for m, col in enumerate(decode_ops[i].targets):
-                        results[i][col] = out[b, m]
-            dt = (time.perf_counter() - t0) * self.compute_scale
-            window_compute += dt
-            self.stats.decode_calls += 1
-            self.stats.decode_ops += len(idxs)
-            self.stats.max_batch = max(self.stats.max_batch, len(idxs))
-            self.stats.batch_sizes.append(len(idxs))
-            self.stats.ops_by_kind[kind] = (
-                self.stats.ops_by_kind.get(kind, 0) + len(idxs)
-            )
-            self.stats.sources_by_kind[kind] = self.stats.sources_by_kind.get(
-                kind, 0
-            ) + sum(len(decode_ops[i].sources) for i in idxs)
-        self.stats.compute_time += window_compute
-        return results, window_compute
+            tuned = self._tuned_for(kind)
+            # buckets beyond the top rung split into top-rung launches
+            cap = PAD_LADDER[-1]
+            chunks = [all_idxs[c : c + cap] for c in range(0, len(all_idxs), cap)]
+            for idxs in chunks:
+                self._launch_bucket(key, kind, idxs, tuned, decode_ops,
+                                    fetch, results, bucket_compute)
+        return results, bucket_compute
+
+    def _launch_bucket(
+        self, key, kind, idxs, tuned, decode_ops, fetch, results, bucket_compute
+    ) -> None:
+        """One stacked launch for ``idxs`` (all sharing shape ``key``),
+        padded up the ladder; accumulates its measured compute time into
+        ``bucket_compute[key]`` and writes per-op ``results``."""
+        b_pad = ladder_rung(len(idxs))
+        # ladder padding: replicate the first stripe — same shape,
+        # same coefficients, output rows sliced away below
+        pad_idxs = idxs + [idxs[0]] * (b_pad - len(idxs))
+        kw = {"interpret": self.interpret}
+        if kind == "V":
+            data = np.stack(
+                [np.stack([fetch(s) for s in decode_ops[i].sources]) for i in pad_idxs]
+            )  # (B, T, q)
+            if tuned is not None:
+                kw["block_n"] = tuned.block_n_for(data.shape[-1])
+            launch = lambda: ops.xor_parity_batched(jnp.asarray(data), **kw)
+        else:
+            coefs = np.stack([decode_ops[i].coeffs for i in pad_idxs])  # (B, M, K)
+            data = np.stack(
+                [np.stack([fetch(s) for s in decode_ops[i].sources]) for i in pad_idxs]
+            )  # (B, K, q)
+            if tuned is not None:
+                kw["block_n"] = tuned.block_n_for(data.shape[-1])
+                kw["packed"] = tuned.packed
+            launch = lambda: ops.gf256_matmul_batched(coefs, jnp.asarray(data), **kw)
+        # Untimed warm-up on first sight of a traced signature: the
+        # padded batch size B and byte length are jit shape keys, and
+        # the one-off trace/compile cost must not be billed to the
+        # window's simulated decode latency.
+        sig = (key, b_pad, data.shape[-1])
+        if sig not in self._warm:
+            jax.block_until_ready(launch())
+            self._warm.add(sig)
+            self.stats.jit_entries = len(self._warm)
+            self.stats.decode_shapes = len({s[0] for s in self._warm})
+        t0 = time.perf_counter()
+        out = launch()
+        jax.block_until_ready(out)
+        out = np.asarray(out)
+        if kind == "V":
+            for b, i in enumerate(idxs):  # out: (B, q)
+                results[i][decode_ops[i].targets[0]] = out[b]
+        else:
+            for b, i in enumerate(idxs):  # out: (B, M, q)
+                for m, col in enumerate(decode_ops[i].targets):
+                    results[i][col] = out[b, m]
+        dt = (time.perf_counter() - t0) * self.compute_scale
+        bucket_compute[key] = bucket_compute.get(key, 0.0) + dt
+        self.stats.compute_time += dt
+        self.stats.decode_calls += 1
+        self.stats.decode_ops += len(idxs)
+        self.stats.padded_ops += b_pad - len(idxs)
+        self.stats.max_batch = max(self.stats.max_batch, len(idxs))
+        self.stats.batch_sizes.append(len(idxs))
+        self.stats.ops_by_kind[kind] = (
+            self.stats.ops_by_kind.get(kind, 0) + len(idxs)
+        )
+        self.stats.sources_by_kind[kind] = self.stats.sources_by_kind.get(
+            kind, 0
+        ) + sum(len(decode_ops[i].sources) for i in idxs)

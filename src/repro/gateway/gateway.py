@@ -1,23 +1,62 @@
 """The object-storage serving gateway: request-driven PUT/GET over the
 simulated CORE cluster, end to end.
 
-Event loop: requests (Poisson arrivals) are grouped into small batching
-windows; each window's GETs are planned against the live failure set
-(planner.py), their reconstructions coalesced into batched kernel
-launches (coalescer.py), and every byte moved rides the shared
-NetSimulator fabric — where background repair traffic (BlockFixer at
-BACKGROUND priority) contends with foreground reads, instead of running
-in a separate universe. Block contents are real; every degraded GET is
-verified against ground truth.
+Requests (Poisson arrivals) are grouped into small batching windows; each
+window's GETs are planned against the live failure set (planner.py) and
+their reconstructions coalesced into batched kernel launches
+(coalescer.py). Every byte moved rides the shared NetSimulator fabric —
+where background repair traffic (BlockFixer at BACKGROUND priority)
+contends with foreground reads, instead of running in a separate
+universe. Block contents are real; every degraded GET is verified
+against ground truth.
+
+Pipeline stages (config.pipeline):
+
+  1. **fetch**   — every source block of the window's plans is scheduled
+     on the fabric at the request's plan time (``ReadPlan.planned_at``);
+     cache hits are ready immediately. Under the quantum fabric
+     (config.fabric) these transfers preempt long background repair
+     transfers at quantum granularity instead of queueing behind them.
+  2. **decode**  — reconstructions are deduped across the window, shape-
+     bucketed, and executed as stacked Pallas launches whose wall time
+     is measured per bucket. Launches occupy a serial simulated decode
+     engine; each bucket's launch is issued as soon as THAT bucket's
+     source transfers complete and the engine frees — not after the
+     whole window's fetches.
+  3. **verify / deliver** — each GET completes at the max of its direct
+     fetches and the decode launches it depends on; contents are checked
+     against ground truth host-side (zero simulated cost).
+
+In ``pipelined`` mode (default) the stages overlap across windows:
+window N+1's fabric transfers proceed while window N's decode launches
+occupy the engine, and the engine drains buckets in source-arrival
+order. ``serial`` mode is the comparison baseline: it charges the
+serialization a synchronous flush-per-batch loop actually implies — a
+window's transfers may not start before the previous window fully
+completed, no launch is issued before ALL the window's transfers land,
+the launches run back-to-back, and every degraded GET of the window
+waits for the last of them. (The PR-1 loop executed stages strictly in
+sequence but its simulated timestamps let them overlap optimistically;
+serial mode prices that loop honestly rather than reproducing its
+accounting.)
+
+Fabric quantum model (storage/netmodel.py): transfers are scheduled in
+fixed full-rate quanta; a priority class with share s may claim one
+quantum per quantum/s of wall time per port, so the holes a throttled
+background class leaves are real preemption points for foreground reads
+— ``background_share`` is a weighted-fair quantum ratio, not a rate cap.
 
 Latency model per request: arrival -> (cache | fabric transfers to the
-request's client port) -> batched decode (all ops of a window wait on
-the shared launches) -> completion. Decode compute is measured on the
-real jitted kernels and scaled by the cluster profile.
+request's client port) -> per-bucket decode on the shared engine ->
+completion. Decode compute is measured on the real jitted kernels
+(autotuned per backend, batch sizes padded up a fixed ladder so the jit
+cache stays bounded — GatewayReport.jit_cache_entries) and scaled by the
+cluster profile.
 """
 
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -41,17 +80,25 @@ from repro.storage.netmodel import (
 )
 from repro.storage.repair import BlockFixer
 
+PIPELINED = "pipelined"
+SERIAL = "serial"
+
 
 @dataclass(frozen=True)
 class GatewayConfig:
     batch_window: float = 0.002  # seconds of arrival coalescing
     cache_bytes: int = 0  # 0 disables the block cache
+    cache_policy: str = "cost"  # "cost" (rebuild-cost-aware) | "lru"
     num_client_ports: int = 32  # parallel client-side NICs
-    background_share: float = 0.5  # repair's fraction of a link
+    background_share: float = 0.5  # repair's weighted-fair quantum ratio
+    fabric: str = "quantum"  # "quantum" (preemptive) | "fifo"
     repair_on_failure: bool = False  # run BlockFixer after detection
     repair_delay: float = 5.0  # failure-detection lag (seconds)
     verify: bool = True  # check every GET against ground truth
     interpret: bool | None = None  # kernel backend override
+    pipeline: str = PIPELINED  # "pipelined" | "serial" (PR-1 loop)
+    autotune: bool = True  # measured kernel-parameter sweep at first use
+    record_payloads: bool = False  # sha256 of every GET payload in records
 
 
 @dataclass
@@ -64,12 +111,14 @@ class RequestRecord:
     bytes_read: int  # fabric bytes moved for this request
     reconstruction_blocks: int  # planner's Table-1 traffic
     cache_hits: int
+    payload_digest: str | None = None  # sha256 (record_payloads=True)
 
 
 @dataclass
 class GatewayReport:
     records: list[RequestRecord] = field(default_factory=list)
     repair_reports: list = field(default_factory=list)
+    jit_cache_entries: int = 0  # coalescer's traced-signature count
 
     # -- aggregates -----------------------------------------------------------
     @property
@@ -80,8 +129,8 @@ class GatewayReport:
     def degraded_gets(self) -> list[RequestRecord]:
         return [r for r in self.completed if r.kind == "get" and r.degraded]
 
-    def latency_percentile(self, q: float) -> float:
-        lats = [r.latency for r in self.completed]
+    def latency_percentile(self, q: float, since: float = 0.0) -> float:
+        lats = [r.latency for r in self.completed if r.time >= since]
         return float(np.percentile(lats, q)) if lats else 0.0
 
     @property
@@ -120,12 +169,19 @@ class ObjectGateway:
         self.codec = CoreCodec(code)
         self.profile = profile
         self.config = config or GatewayConfig()
+        if self.config.pipeline not in (PIPELINED, SERIAL):
+            raise ValueError(
+                f"pipeline must be 'pipelined' or 'serial', got "
+                f"{self.config.pipeline!r}"
+            )
         self.store = BlockStore(num_nodes=num_nodes)
         self.sim = NetSimulator(
-            profile, background_share=self.config.background_share
+            profile,
+            background_share=self.config.background_share,
+            mode=self.config.fabric,
         )
         self.cache = (
-            LRUBlockCache(self.config.cache_bytes)
+            LRUBlockCache(self.config.cache_bytes, policy=self.config.cache_policy)
             if self.config.cache_bytes
             else None
         )
@@ -135,6 +191,7 @@ class ObjectGateway:
         self.coalescer = DecodeCoalescer(
             compute_scale=profile.compute_scale,
             interpret=self.config.interpret,
+            autotune_kernels=self.config.autotune,
         )
         self.fixer = BlockFixer(
             self.store,
@@ -143,6 +200,7 @@ class ObjectGateway:
             mode="core",
             sim=self.sim,
             priority=BACKGROUND,
+            on_block_repaired=self._on_block_repaired,
         )
         self._objects: dict[int, tuple[str, int]] = {}  # object -> (group, row)
         self._groups: dict[str, list[int]] = {}
@@ -151,7 +209,23 @@ class ObjectGateway:
         # Repaired blocks become visible only once the repair's fabric
         # transfers complete: key -> completion time of its write-back.
         self._healing: dict[BlockKey, float] = {}
+        # Cache entries to re-price once their block's heal completes —
+        # re-pricing at repair time would demote a reconstruction that is
+        # still the only copy reads dated before heal completion can use.
+        self._reprice_on_heal: set[BlockKey] = set()
+        # Simulated time at which each cached block came into existence
+        # (fetch completion / decode completion). A cache hit may not be
+        # served before it: blocks are cached at host flush time, and
+        # without this gate a later window's request dated before an
+        # engine-backlogged decode would read a block that does not exist
+        # yet in simulated time.
+        self._cache_ready: dict[BlockKey, float] = {}
         self._clock = 0.0  # logical time of the request being planned
+        # Simulated serial decode engine: one batched launch at a time;
+        # persists across windows so pipelined windows overlap on it.
+        self._engine_free = 0.0
+        # Serial-mode barrier: completion time of the previous window.
+        self._window_free = 0.0
 
     # -- availability: store OR cache, gated on repair completion --------------
     def _available(self, key: BlockKey) -> bool:
@@ -163,8 +237,23 @@ class ObjectGateway:
                     # still in flight at this request's time
                     return self.cache is not None and key in self.cache
                 del self._healing[key]
+                self._apply_heal_reprice(key)
             return True
         return self.cache is not None and key in self.cache
+
+    def _on_block_repaired(self, key: BlockKey) -> None:
+        # BlockFixer wrote the block back; once the write-back's fabric
+        # transfers complete (the _healing gate) it is a cheap store
+        # read again and any cached copy stops deserving reconstruction
+        # priority. The re-price is deferred to that simulated moment.
+        if self.cache is not None:
+            self._reprice_on_heal.add(key)
+
+    def _apply_heal_reprice(self, key: BlockKey) -> None:
+        if key in self._reprice_on_heal:
+            self._reprice_on_heal.discard(key)
+            if self.cache is not None:
+                self.cache.refresh_cost(key, 1.0)
 
     # -- bulk load (trace setup; not metered on the fabric) --------------------
     def load_objects(self, objects: np.ndarray) -> None:
@@ -255,10 +344,12 @@ class ObjectGateway:
             self._flush(batch, report)
             batch, batch_deadline = [], None
         boundary_events(None)
+        report.jit_cache_entries = self.coalescer.stats.jit_entries
         return report
 
     # -- request batch execution ------------------------------------------------
     def _flush(self, batch: list[Request], report: GatewayReport) -> None:
+        serial = self.config.pipeline == SERIAL
         gets: list[tuple[Request, ReadPlan]] = []
         # Blocks whose plans depend on the CACHE copy (store copy is
         # gone) are pinned at plan time — later fetches in this window
@@ -276,7 +367,7 @@ class ObjectGateway:
             gid, row = self._objects[req.object_id]
             self._clock = req.time
             try:
-                plan = self.planner.plan(gid, row)
+                plan = self.planner.plan(gid, row, at=req.time)
             except UnreadableObjectError:
                 report.records.append(
                     RequestRecord(req.time, req.object_id, "get", None, True, 0, 0, 0)
@@ -292,13 +383,22 @@ class ObjectGateway:
         if not gets:
             return
 
-        # 1) fabric: fetch every needed block to the request's client port
+        # 1) fetch: every needed block rides the fabric to the request's
+        # client port. Serial mode gates the whole window's transfers on
+        # the previous window's completion (the synchronous loop cannot
+        # start fetching window N+1 while window N is still decoding);
+        # pipelined mode starts them at plan time.
         ready: list[dict[BlockKey, float]] = []
         bytes_read: list[int] = []
         cache_hits: list[int] = []
         fetched: dict[BlockKey, np.ndarray] = {}
         for i, (req, plan) in enumerate(gets):
             client = self._client_port(req)
+            fetch_at = (
+                max(plan.planned_at, self._window_free)
+                if serial
+                else plan.planned_at
+            )
             key_ready: dict[BlockKey, float] = {}
             nbytes = 0
             hits = 0
@@ -307,7 +407,7 @@ class ObjectGateway:
                 if blk is None and self.cache is not None:
                     blk = self.cache.get(key)
                 if blk is not None:
-                    key_ready[key] = req.time
+                    key_ready[key] = max(fetch_at, self._cache_ready.get(key, 0.0))
                     hits += 1
                 else:
                     blk = self.store.get(key)
@@ -316,7 +416,7 @@ class ObjectGateway:
                             self.store.node_of(key),
                             client,
                             blk.nbytes,
-                            req.time,
+                            fetch_at,
                             priority=FOREGROUND,
                         )
                     )
@@ -324,14 +424,16 @@ class ObjectGateway:
                     nbytes += blk.nbytes
                     if self.cache is not None:
                         self.cache.put(key, blk)
+                        self._cache_ready[key] = end
                 fetched[key] = blk
             ready.append(key_ready)
             bytes_read.append(nbytes)
             cache_hits.append(hits)
 
-        # 2) coalesced decode: dedup identical reconstructions (a hot
-        # degraded object appears once per window, not once per request),
-        # then one launch per shape bucket
+        # 2) decode: dedup identical reconstructions (a hot degraded
+        # object appears once per window, not once per request), then one
+        # stacked launch per shape bucket, scheduled on the simulated
+        # serial decode engine.
         unique_idx: dict[tuple, int] = {}
         uops = []
         owners: list[list[int]] = []
@@ -345,7 +447,7 @@ class ObjectGateway:
                     uops.append(op)
                     owners.append([])
                 owners[j].append(i)
-        results, window_compute = self.coalescer.execute(
+        results, bucket_compute = self.coalescer.execute(
             uops, lambda k: fetched[k]
         )
         # all sources of a bucket must land before its shared launch runs
@@ -354,27 +456,69 @@ class ObjectGateway:
             t_src = max(ready[i][s] for i in owners[j] for s in op.sources)
             key = op.shape_key
             bucket_ready[key] = max(bucket_ready.get(key, 0.0), t_src)
-        decode_done = {
-            key: t + window_compute for key, t in bucket_ready.items()
-        }
+        decode_done: dict[tuple, float] = {}
+        if serial:
+            # strict staging: no launch before ALL the window's transfers
+            # (even direct-only fetches) complete; launches back-to-back;
+            # the whole window waits for the last launch.
+            window_net = max(
+                (t for key_ready in ready for t in key_ready.values()),
+                default=self._window_free,
+            )
+            start = max(window_net, self._engine_free)
+            end = start + sum(bucket_compute.values())
+            for key in bucket_ready:
+                decode_done[key] = end
+            if bucket_compute:
+                self._engine_free = end
+        else:
+            # pipelined: issue each bucket as soon as its own sources
+            # land and the engine frees, in source-arrival order
+            for key in sorted(bucket_ready, key=bucket_ready.get):
+                start = max(bucket_ready[key], self._engine_free)
+                end = start + bucket_compute[key]
+                decode_done[key] = end
+                self._engine_free = end
 
-        # 3) assemble + verify + record
+        # 3) verify + deliver
         decoded_per_req: list[dict[int, np.ndarray]] = [dict() for _ in gets]
         for j, op in enumerate(uops):
             for i in owners[j]:
                 decoded_per_req[i].update(results[j])
+        # rebuild cost of a decoded block = source blocks its op consumed
+        # (t vertical, k horizontal) — the cache's eviction currency
+        decode_cost: dict[int, dict[int, int]] = {}
+        for j, op in enumerate(uops):
+            for i in owners[j]:
+                costs = decode_cost.setdefault(i, {})
+                for col in op.targets:
+                    costs[col] = len(op.sources)
+        window_end = self._window_free
         for i, (req, plan) in enumerate(gets):
             done = req.time
             for key in plan.direct:
                 done = max(done, ready[i][key])
             for op in plan.decodes:
                 done = max(done, decode_done[op.shape_key])
-            if self.config.verify:
-                self._verify_get(req, plan, fetched, decoded_per_req[i])
+            digest = None
+            if self.config.verify or self.config.record_payloads:
+                payload = self._assemble_payload(req, plan, fetched, decoded_per_req[i])
+                if self.config.verify:
+                    self._verify_get(req, payload)
+                if self.config.record_payloads:
+                    digest = hashlib.sha256(payload.tobytes()).hexdigest()
             if self.cache is not None:
                 gid, row = self._objects[req.object_id]
+                costs = decode_cost.get(i, {})
+                col_done = {
+                    col: decode_done[op.shape_key]
+                    for op in plan.decodes
+                    for col in op.targets
+                }
                 for col, blk in decoded_per_req[i].items():
-                    self.cache.put((gid, row, col), blk)
+                    ckey = (gid, row, col)
+                    self.cache.put(ckey, blk, cost=costs.get(col, 1.0))
+                    self._cache_ready[ckey] = col_done.get(col, done)
             report.records.append(
                 RequestRecord(
                     req.time,
@@ -385,8 +529,12 @@ class ObjectGateway:
                     bytes_read[i],
                     plan.reconstruction_blocks,
                     cache_hits[i],
+                    payload_digest=digest,
                 )
             )
+            window_end = max(window_end, done)
+        if serial:
+            self._window_free = window_end
 
     # -- PUT --------------------------------------------------------------------
     def _handle_put(self, req: Request) -> RequestRecord:
@@ -447,6 +595,8 @@ class ObjectGateway:
             # a client write supersedes any in-flight repair write-back
             self._healing.pop(old_key, None)
             self._healing.pop(par_key, None)
+            self._reprice_on_heal.discard(old_key)
+            self._reprice_on_heal.discard(par_key)
         self._expected[oid] = new_data
         return RequestRecord(
             req.time, oid, "put", done - req.time, False, nbytes, 0, 0
@@ -474,10 +624,15 @@ class ObjectGateway:
 
     # -- helpers ----------------------------------------------------------------
     def _client_port(self, req: Request) -> int:
-        # negative node ids: client NICs outside the storage cluster
-        return -(1 + (req.object_id % self.config.num_client_ports))
+        # negative node ids: client NICs outside the storage cluster.
+        # Hashed per REQUEST, not per object: a popular object is popular
+        # because many distinct clients want it, so its traffic spreads
+        # over client NICs instead of melting one artificial hot port.
+        h = (req.object_id * 1_000_003 + int(req.time * 1e7)) % (2**31)
+        return -(1 + h % self.config.num_client_ports)
 
-    def _verify_get(self, req, plan, fetched, decoded) -> None:
+    def _assemble_payload(self, req, plan, fetched, decoded) -> np.ndarray:
+        """The GET's (k, q) payload: direct blocks + reconstructions."""
         gid, row = self._objects[req.object_id]
         got = []
         for c in range(self.code.k):
@@ -486,9 +641,11 @@ class ObjectGateway:
                 got.append(fetched[key])
             else:
                 got.append(decoded[c])
-        got = np.stack(got)
+        return np.stack(got)
+
+    def _verify_get(self, req, payload: np.ndarray) -> None:
         want = self._expected[req.object_id]
-        if not np.array_equal(got, want):
+        if not np.array_equal(payload, want):
             raise AssertionError(
                 f"GET integrity failure for object {req.object_id}"
             )

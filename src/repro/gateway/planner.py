@@ -55,6 +55,10 @@ class ReadPlan:
     row: int
     direct: tuple[BlockKey, ...]  # available data blocks, fetched as-is
     decodes: tuple[DecodeOp, ...]
+    # Clock at which the plan was made against the live failure set; the
+    # pipelined gateway uses it as the fetch stage's earliest start (a
+    # plan is only valid from the moment it was planned).
+    planned_at: float = 0.0
 
     @property
     def degraded(self) -> bool:
@@ -84,7 +88,7 @@ class DegradedReadPlanner:
         self.code = code
         self._available = available_fn if available_fn is not None else store.available
 
-    def plan(self, group_id: str, row: int) -> ReadPlan:
+    def plan(self, group_id: str, row: int, at: float = 0.0) -> ReadPlan:
         code = self.code
         k, n = code.k, code.n
         avail_data = [
@@ -93,7 +97,7 @@ class DegradedReadPlanner:
         missing = [c for c in range(k) if c not in avail_data]
         direct = tuple((group_id, row, c) for c in avail_data)
         if not missing:
-            return ReadPlan(group_id, row, direct, ())
+            return ReadPlan(group_id, row, direct, (), planned_at=at)
 
         vertical_ok = all(self._column_intact(group_id, row, c) for c in missing)
         avail_row = [
@@ -108,16 +112,20 @@ class DegradedReadPlanner:
             decodes = tuple(
                 self._vertical_op(group_id, row, c) for c in missing
             )
-            return ReadPlan(group_id, row, direct, decodes)
+            return ReadPlan(group_id, row, direct, decodes, planned_at=at)
         if horizontal_ok:
             return ReadPlan(
-                group_id, row, direct, (self._horizontal_op(group_id, row, avail_row, missing),)
+                group_id,
+                row,
+                direct,
+                (self._horizontal_op(group_id, row, avail_row, missing),),
+                planned_at=at,
             )
         if vertical_ok:
             decodes = tuple(
                 self._vertical_op(group_id, row, c) for c in missing
             )
-            return ReadPlan(group_id, row, direct, decodes)
+            return ReadPlan(group_id, row, direct, decodes, planned_at=at)
         raise UnreadableObjectError(
             f"object ({group_id}, row {row}): columns {missing} broken and "
             f"only {len(avail_row)} < k={k} row blocks survive"

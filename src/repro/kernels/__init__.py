@@ -2,7 +2,7 @@
 # vertical XOR parity — see DESIGN.md §3 for the TPU adaptation
 # (bit-plane GF multiply on the VPU; no MXU mapping exists for field
 # arithmetic).
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels.ops import (
     gf256_matmul,
     gf256_matmul_batched,
@@ -13,6 +13,7 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
+    "autotune",
     "ops",
     "ref",
     "gf256_matmul",

@@ -1,0 +1,143 @@
+"""Measured autotuning for the GF(256) / XOR Pallas entry points.
+
+The kernels expose two knobs whose best setting is backend-dependent:
+
+  * ``block_n`` — grid tile width. On TPU, fatter tiles amortize
+    per-step grid/DMA overhead on these bandwidth-bound kernels; under
+    the CPU interpreter, each grid step is a Python execution of the
+    kernel body, so the trade-off inverts at small N.
+  * ``packed``  — the u32 mask-spread GF multiply (K2): structurally
+    ~2x fewer VPU lane-ops on TPU, slower under the interpreter
+    (bitcast overhead).
+
+Instead of hard-coding per-backend defaults, this module *measures* the
+candidates once per (kernel, backend) at first use — including the
+interpret path, so the sweep itself is exercised by the CPU test suite —
+and caches the winner for the process lifetime. The gateway's decode
+coalescer asks for tuned parameters before its first launch; everything
+stays off the request path because results are cached.
+
+The probe shapes are deliberately tiny (a few batched stripes over the
+candidates' least common multiple of bytes): the point is ranking the
+candidates, not absolute numbers. Callers cap ``block_n`` to their
+actual byte length (ops.py pads N up to a block_n multiple, so a tuned
+32 KiB tile applied to 4 KiB blocks would 8x the work).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.backend import resolve_interpret
+
+GF_BLOCK_CANDIDATES = (2048, 8192, 32768)
+XOR_BLOCK_CANDIDATES = (8192, 65536)
+_PROBE_REPEATS = 3
+
+
+@dataclass(frozen=True)
+class TunedKernel:
+    block_n: int
+    packed: bool
+    elapsed: float  # best measured seconds for the winning config
+
+    def block_n_for(self, n: int) -> int:
+        """Tuned tile capped to the actual byte length (ops' next-power-
+        of-two rounding), so padding never multiplies the work."""
+        # deferred, like the probe imports: the kernels package inits
+        # autotune before ops, so a module-level import would cycle
+        from repro.kernels.ops import _next_pow2
+
+        return min(self.block_n, _next_pow2(n))
+
+
+_CACHE: dict[tuple[str, bool], TunedKernel] = {}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def report() -> dict[str, dict]:
+    """Tuned winners so far, keyed 'kind/backend' (for benchmark rows)."""
+    return {
+        f"{kind}/{'interpret' if interp else 'compiled'}": {
+            "block_n": t.block_n,
+            "packed": t.packed,
+            "elapsed": t.elapsed,
+        }
+        for (kind, interp), t in _CACHE.items()
+    }
+
+
+def _best(candidates: list[tuple[tuple[int, bool], "callable"]]) -> tuple[int, bool, float]:
+    best_key, best_dt = None, float("inf")
+    for key, launch in candidates:
+        jax.block_until_ready(launch())  # untimed warm-up: trace + compile
+        dt = float("inf")
+        for _ in range(_PROBE_REPEATS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(launch())
+            dt = min(dt, time.perf_counter() - t0)
+        if dt < best_dt:
+            best_key, best_dt = key, dt
+    return best_key[0], best_key[1], best_dt
+
+
+def tuned_gf256(interpret: bool | None = None) -> TunedKernel:
+    """Winning (block_n, packed) for the batched GF(256) decode entry."""
+    interpret = resolve_interpret(interpret)
+    cached = _CACHE.get(("gf256", interpret))
+    if cached is not None:
+        return cached
+    from repro.kernels import ops  # deferred: ops imports this module
+
+    n = max(GF_BLOCK_CANDIDATES)  # multiple of every candidate
+    rng = np.random.default_rng(0)
+    coefs = rng.integers(0, 256, size=(2, 2, 6), dtype=np.uint8)
+    data = jnp.asarray(rng.integers(0, 256, size=(2, 6, n), dtype=np.uint8))
+    candidates = []
+    for bn in GF_BLOCK_CANDIDATES:
+        for packed in (False, True):
+            candidates.append(
+                (
+                    (bn, packed),
+                    lambda bn=bn, packed=packed: ops.gf256_matmul_batched(
+                        coefs, data, block_n=bn, interpret=interpret, packed=packed
+                    ),
+                )
+            )
+    bn, packed, dt = _best(candidates)
+    tuned = TunedKernel(block_n=bn, packed=packed, elapsed=dt)
+    _CACHE[("gf256", interpret)] = tuned
+    return tuned
+
+
+def tuned_xor(interpret: bool | None = None) -> TunedKernel:
+    """Winning block_n for the batched XOR parity entry (no packed
+    variant exists — XOR is already lane-width-agnostic)."""
+    interpret = resolve_interpret(interpret)
+    cached = _CACHE.get(("xor", interpret))
+    if cached is not None:
+        return cached
+    from repro.kernels import ops
+
+    n = max(XOR_BLOCK_CANDIDATES)
+    rng = np.random.default_rng(1)
+    data = jnp.asarray(rng.integers(0, 256, size=(2, 3, n), dtype=np.uint8))
+    candidates = [
+        (
+            (bn, False),
+            lambda bn=bn: ops.xor_parity_batched(data, block_n=bn, interpret=interpret),
+        )
+        for bn in XOR_BLOCK_CANDIDATES
+    ]
+    bn, _, dt = _best(candidates)
+    tuned = TunedKernel(block_n=bn, packed=False, elapsed=dt)
+    _CACHE[("xor", interpret)] = tuned
+    return tuned

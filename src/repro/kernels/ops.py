@@ -32,11 +32,14 @@ def gf256_matmul(
     *,
     block_n: int | None = None,
     interpret: bool | None = None,
+    packed: bool = False,
 ) -> jnp.ndarray:
     """C (M, N) = coef (M, K) @ data (K, N) over GF(2^8), Pallas-backed.
 
     ``coef`` is a host-side numpy matrix (generator/repair coefficients);
     its bit-plane expansion happens at trace time and is constant-folded.
+    ``packed`` selects the u32 mask-spread kernel variant (K2); the
+    measured per-backend winner comes from kernels/autotune.py.
     """
     interpret = resolve_interpret(interpret)
     n = data.shape[-1]
@@ -45,7 +48,9 @@ def gf256_matmul(
     mc = jnp.asarray(_gfk.expand_coeff_bitplanes(np.asarray(coef)))
     data = data.astype(jnp.uint8)
     data_p, orig_n = _pad_to(data, block_n, axis=-1)
-    out = _gfk.gf256_matmul_planes(mc, data_p, block_n=block_n, interpret=interpret)
+    out = _gfk.gf256_matmul_planes(
+        mc, data_p, block_n=block_n, interpret=interpret, packed=packed
+    )
     return out[:, :orig_n]
 
 
@@ -69,6 +74,7 @@ def gf256_matmul_batched(
     *,
     block_n: int | None = None,
     interpret: bool | None = None,
+    packed: bool = False,
 ) -> jnp.ndarray:
     """Stacked decode: out (B, M, N) = coefs (B, M, K) @ data (B, K, N),
     each batch element an independent GF(2^8) product, in ONE kernel
@@ -76,6 +82,8 @@ def gf256_matmul_batched(
 
     ``coefs`` is host-side numpy (per-stripe repair/decode matrices);
     bit-plane expansion happens at trace time and is constant-folded.
+    ``packed`` selects the u32 mask-spread kernel variant (K2); the
+    measured per-backend winner comes from kernels/autotune.py.
     """
     interpret = resolve_interpret(interpret)
     n = data.shape[-1]
@@ -86,7 +94,7 @@ def gf256_matmul_batched(
     data = data.astype(jnp.uint8)
     data_p, orig_n = _pad_to(data, block_n, axis=-1)
     out = _gfk.gf256_matmul_planes_batched(
-        mc, data_p, block_n=block_n, interpret=interpret
+        mc, data_p, block_n=block_n, interpret=interpret, packed=packed
     )
     return out[..., :orig_n]
 

@@ -10,11 +10,36 @@ blocks. Two cluster profiles from §8 are provided:
 Compute costs are *measured* (the codec math runs for real on this host);
 network time is *simulated* from byte counts and the profile, since this
 container has no real cluster fabric.
+
+Fabric sharing comes in two modes:
+
+  * ``fifo``    — a transfer occupies both ports contiguously from the
+    moment they free up; background transfers simply run at
+    ``background_share`` of the link rate. A long repair transfer
+    head-of-line-blocks any later foreground read on the same ports.
+  * ``quantum`` — (default) transfers are scheduled in fixed-size
+    *quanta*: each quantum transmits at full link rate, and background
+    quanta are spaced so the class consumes only ``background_share`` of
+    the link in steady state (weighted-fair sharing; ``background_share``
+    is the quantum *ratio*, not a rate cap). The idle gaps between a
+    background transfer's quanta are real holes in the port timeline, so
+    a foreground read arriving mid-way through a multi-second repair
+    transfer slots into the next hole instead of waiting for the whole
+    thing — preemption at quantum granularity, the way production
+    traffic shapers (DRR/WFQ schedulers) bound repair interference.
+
+Both modes conserve bytes exactly and an uncontended transfer finishes at
+(essentially) the same time either way; they differ only in how classes
+interleave under contention.
 """
 
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
+
+FIFO = "fifo"
+QUANTUM = "quantum"
 
 
 @dataclass(frozen=True)
@@ -51,24 +76,74 @@ class Transfer:
     priority: int = FOREGROUND
 
 
+class _PortTimeline:
+    """Busy intervals of one unidirectional port, sorted and disjoint.
+
+    Supports first-fit gap search (``next_fit``) and interval insertion
+    with adjacent-merge, so quantum-mode scheduling can place a transfer
+    *inside* holes left by earlier-scheduled lower-priority quanta.
+    """
+
+    __slots__ = ("starts", "ends")
+
+    def __init__(self):
+        self.starts: list[float] = []
+        self.ends: list[float] = []
+
+    def next_fit(self, t: float, dur: float) -> float:
+        """Earliest s >= t such that [s, s + dur) overlaps no interval.
+
+        A nanosecond of tolerance keeps exact-fit holes usable — the
+        weighted-fair spacing leaves holes of exactly one quantum, which
+        strict float comparison would reject by one ulp."""
+        i = bisect.bisect_right(self.ends, t)
+        for j in range(i, len(self.starts)):
+            if self.starts[j] - t >= dur - 1e-9:
+                return t
+            t = max(t, self.ends[j])
+        return t
+
+    def occupy(self, start: float, end: float) -> None:
+        i = bisect.bisect_left(self.starts, start)
+        # merge with the previous interval when contiguous
+        if i > 0 and self.ends[i - 1] == start:
+            if i < len(self.starts) and end == self.starts[i]:
+                # bridges two intervals: fuse all three
+                self.ends[i - 1] = self.ends[i]
+                del self.starts[i], self.ends[i]
+            else:
+                self.ends[i - 1] = end
+            return
+        if i < len(self.starts) and end == self.starts[i]:
+            self.starts[i] = start
+            return
+        self.starts.insert(i, start)
+        self.ends.insert(i, end)
+
+
 @dataclass
 class NetSimulator:
     """Event-ordered per-node bandwidth simulator with priority classes.
 
     Each node has unit-bandwidth send and receive ports; a transfer
-    occupies both for nbytes / bandwidth seconds, starting no earlier
-    than its dependency time and when both ports are free. Foreground
-    and background transfers share the SAME port timelines — repair
-    traffic and client reads contend on one fabric instead of running in
-    separate universes — and background transfers additionally run at
-    ``background_share`` of the link rate.
+    occupies both, starting no earlier than its dependency time.
+    Foreground and background transfers share the SAME port timelines —
+    repair traffic and client reads contend on one fabric instead of
+    running in separate universes. How they interleave is governed by
+    ``mode`` (see the module docstring): ``quantum`` (default) schedules
+    fixed-size full-rate quanta with weighted-fair spacing so foreground
+    traffic preempts long background transfers at quantum boundaries;
+    ``fifo`` reproduces the PR-1 hold-the-port-until-done model with
+    background throttled to ``background_share`` of the rate.
 
     Per-class byte/busy accounting feeds the gateway's interference
     metrics (how much repair slows reads and vice versa).
     """
 
     profile: ClusterProfile
-    background_share: float = 1.0  # fraction of link rate for priority > 0
+    background_share: float = 1.0  # quantum ratio (fifo: rate fraction)
+    mode: str = QUANTUM
+    quantum_bytes: int = 65536  # quantum-mode scheduling granule
     send_free: dict[int, float] = field(default_factory=dict)
     recv_free: dict[int, float] = field(default_factory=dict)
     total_bytes: int = 0
@@ -84,9 +159,39 @@ class NetSimulator:
             raise ValueError(
                 f"background_share must be in (0, 1], got {self.background_share}"
             )
+        if self.mode not in (FIFO, QUANTUM):
+            raise ValueError(f"mode must be 'fifo' or 'quantum', got {self.mode!r}")
+        if self.quantum_bytes <= 0:
+            raise ValueError(f"quantum_bytes must be positive, got {self.quantum_bytes}")
+        self._send: dict[int, _PortTimeline] = {}
+        self._recv: dict[int, _PortTimeline] = {}
+        # per-(direction, node, class) eligibility cursor: a share-s class
+        # may claim its next quantum on a port no earlier than
+        # (previous quantum start + dur/s), so the ratio holds across a
+        # STREAM of small transfers too, not just within one big one
+        self._class_cursor: dict[tuple[str, int, int], float] = {}
+        # set once any share<1 transfer is scheduled; until then the
+        # timelines are hole-free and share-1.0 transfers can take the
+        # O(1) contiguous fast path (schedule-identical to chunking)
+        self._seen_throttled = False
 
     def transfer(self, t: Transfer) -> float:
         """Schedule a transfer; returns its completion time (seconds)."""
+        if self.mode == QUANTUM:
+            end, busy = self._transfer_quantum(t)
+        else:
+            end, busy = self._transfer_fifo(t)
+        self.total_bytes += t.nbytes
+        self.makespan = max(self.makespan, end)
+        self.class_bytes[t.priority] = self.class_bytes.get(t.priority, 0) + t.nbytes
+        self.class_busy[t.priority] = self.class_busy.get(t.priority, 0.0) + busy
+        self.class_makespan[t.priority] = max(
+            self.class_makespan.get(t.priority, 0.0), end
+        )
+        return end
+
+    # -- fifo: the PR-1 hold-until-done model ---------------------------------
+    def _transfer_fifo(self, t: Transfer) -> tuple[float, float]:
         bw = self.profile.node_bandwidth
         if t.priority != FOREGROUND:
             bw *= self.background_share
@@ -99,11 +204,66 @@ class NetSimulator:
         end = start + dur
         self.send_free[t.src_node] = end
         self.recv_free[t.dst_node] = end
-        self.total_bytes += t.nbytes
-        self.makespan = max(self.makespan, end)
-        self.class_bytes[t.priority] = self.class_bytes.get(t.priority, 0) + t.nbytes
-        self.class_busy[t.priority] = self.class_busy.get(t.priority, 0.0) + dur
-        self.class_makespan[t.priority] = max(
-            self.class_makespan.get(t.priority, 0.0), end
+        return end, dur
+
+    # -- quantum: weighted-fair preemptive sharing ----------------------------
+    def _transfer_quantum(self, t: Transfer) -> tuple[float, float]:
+        bw = self.profile.node_bandwidth
+        share = 1.0 if t.priority == FOREGROUND else self.background_share
+        src = self._send.setdefault(t.src_node, _PortTimeline())
+        dst = self._recv.setdefault(t.dst_node, _PortTimeline())
+        ck_s = ("s", t.src_node, t.priority)
+        ck_r = ("r", t.dst_node, t.priority)
+        cursors = self._class_cursor
+        if share < 1.0:
+            self._seen_throttled = True
+        remaining = t.nbytes
+        end = t.not_before
+        busy = 0.0
+        # Full-share fast path while no throttled class has ever run:
+        # the timelines are hole-free, so chunking into quanta would
+        # produce one contiguous reservation anyway — schedule the whole
+        # transfer in one step instead of nbytes/quantum_bytes of them.
+        # (Once holes can exist, per-quantum placement is what lets this
+        # transfer preempt into them, so the loop is mandatory.)
+        chunk_cap = (
+            t.nbytes
+            if share == 1.0 and not self._seen_throttled
+            else self.quantum_bytes
         )
-        return end
+        while remaining > 0:
+            chunk = min(remaining, chunk_cap)
+            remaining -= chunk
+            dur = chunk / bw
+            # each quantum transmits at FULL rate; weighted-fair spacing
+            # makes the class's next quantum on these ports eligible only
+            # dur/share later, so a share-s class consumes at most s of
+            # the link in steady state while the (1-s) holes it leaves
+            # are real gaps other classes preempt into.
+            earliest = max(
+                t.not_before, cursors.get(ck_s, 0.0), cursors.get(ck_r, 0.0)
+            )
+            start = self._find_slot(src, dst, earliest, dur)
+            src.occupy(start, start + dur)
+            dst.occupy(start, start + dur)
+            end = start + dur
+            busy += dur
+            eligible = start + dur / share
+            cursors[ck_s] = eligible
+            cursors[ck_r] = eligible
+        # keep the scalar summaries coherent for introspection/debugging
+        self.send_free[t.src_node] = max(self.send_free.get(t.src_node, 0.0), end)
+        self.recv_free[t.dst_node] = max(self.recv_free.get(t.dst_node, 0.0), end)
+        return end, busy
+
+    @staticmethod
+    def _find_slot(
+        src: _PortTimeline, dst: _PortTimeline, t: float, dur: float
+    ) -> float:
+        """Earliest start >= t with a dur-sized hole on BOTH ports."""
+        while True:
+            t1 = src.next_fit(t, dur)
+            t2 = dst.next_fit(t1, dur)
+            if t2 == t1:
+                return t1
+            t = t2

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,11 @@ class BlockFixer:
     sim: NetSimulator | None = None
     priority: int = 0
     not_before: float = 0.0  # earliest start (failure-detection time)
+    # Invoked with each BlockKey this fixer writes back, right after the
+    # store write. The gateway uses it to re-price / refresh cache
+    # entries whose underlying block just became a cheap store read
+    # again (cost-aware eviction, gateway/cache.py).
+    on_block_repaired: "Callable[[tuple], None] | None" = None
 
     def __post_init__(self):
         self.codec = CoreCodec(self.code)
@@ -178,6 +184,8 @@ class BlockFixer:
                 for i, c in enumerate(batch):
                     self.store.put_block((group_id, r, c), rep[i])
                     repaired_cells.add(c)
+                    if self.on_block_repaired is not None:
+                        self.on_block_repaired((group_id, r, c))
                 report.blocks_fetched += len(fetch_cols)
                 report.bytes_fetched += sum(b.nbytes for b in blocks)
                 report.blocks_repaired += len(batch)
@@ -246,6 +254,8 @@ class BlockFixer:
         for i, cell in enumerate(step.repairs):
             self.store.put_block((group_id, cell[0], cell[1]), rep[i])
             block_ready[cell] = ready
+            if self.on_block_repaired is not None:
+                self.on_block_repaired((group_id, cell[0], cell[1]))
             # redistribution of extra regenerated blocks to their new homes
             if i > 0:
                 home = self.store.node_of((group_id, cell[0], cell[1]))

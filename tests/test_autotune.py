@@ -1,0 +1,56 @@
+"""Measured kernel autotuning (kernels/autotune.py): the sweep must pick
+a real candidate, cache it per backend, and every candidate configuration
+it can pick must be numerically correct (the packed u32 variant and every
+block_n rung are swept on the interpret path too, so this runs on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops, ref
+
+
+def test_tuned_gf256_picks_candidate_and_caches():
+    tuned = autotune.tuned_gf256(True)
+    assert tuned.block_n in autotune.GF_BLOCK_CANDIDATES
+    assert isinstance(tuned.packed, bool)
+    assert tuned.elapsed > 0
+    assert autotune.tuned_gf256(True) is tuned  # process-lifetime cache
+    assert "gf256/interpret" in autotune.report()
+
+
+def test_tuned_xor_picks_candidate_and_caches():
+    tuned = autotune.tuned_xor(True)
+    assert tuned.block_n in autotune.XOR_BLOCK_CANDIDATES
+    assert tuned.packed is False
+    assert autotune.tuned_xor(True) is tuned
+    assert "xor/interpret" in autotune.report()
+
+
+def test_block_n_capped_to_payload_size():
+    """Ladder padding must never multiply kernel work: the tuned tile is
+    capped to the next power of two of the actual byte length."""
+    t = autotune.TunedKernel(block_n=32768, packed=False, elapsed=0.0)
+    assert t.block_n_for(1000) == 1024
+    assert t.block_n_for(128) == 128
+    assert t.block_n_for(50) == 128  # kernel minimum tile
+    assert t.block_n_for(1 << 20) == 32768  # never above the tuned value
+
+
+@pytest.mark.parametrize("block_n", autotune.GF_BLOCK_CANDIDATES)
+@pytest.mark.parametrize("packed", [False, True])
+def test_every_gf256_candidate_config_is_correct(block_n, packed):
+    """Whatever the sweep picks must match the reference bit-for-bit."""
+    rng = np.random.default_rng(block_n + packed)
+    b, m, k, n = 3, 2, 6, 4096
+    coefs = rng.integers(0, 256, size=(b, m, k), dtype=np.uint8)
+    data = rng.integers(0, 256, size=(b, k, n), dtype=np.uint8)
+    got = np.asarray(
+        ops.gf256_matmul_batched(
+            coefs, jnp.asarray(data), block_n=min(block_n, n),
+            interpret=True, packed=packed,
+        )
+    )
+    for i in range(b):
+        want = np.asarray(ref.gf256_matmul(jnp.asarray(coefs[i]), jnp.asarray(data[i])))
+        np.testing.assert_array_equal(got[i], want)

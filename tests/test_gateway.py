@@ -185,6 +185,94 @@ def test_cache_rejects_oversized_and_invalidates():
     assert len(cache) == 0 and cache.nbytes == 0
 
 
+def test_cost_aware_cache_keeps_expensive_reconstructions():
+    """A k-cost horizontal reconstruction outlives cheap 1-cost fetches
+    under pressure, even when it is the oldest entry."""
+    blk = lambda: np.zeros(100, dtype=np.uint8)
+    cache = LRUBlockCache(capacity_bytes=250, policy="cost")  # two blocks
+    cache.put(("g", 0, 0), blk(), cost=6.0)  # horizontal decode, k=6
+    cache.put(("g", 0, 1), blk(), cost=1.0)  # plain fetch
+    cache.put(("g", 0, 2), blk(), cost=1.0)  # evicts the cheap fetch
+    assert ("g", 0, 0) in cache  # expensive entry survives despite age
+    assert ("g", 0, 1) not in cache
+    # vertical (t=3) beats plain fetch but loses to horizontal (k=6)
+    cache.put(("g", 0, 3), blk(), cost=3.0)
+    assert ("g", 0, 0) in cache and ("g", 0, 2) not in cache
+
+
+def test_cost_aware_cache_uniform_costs_degenerate_to_lru():
+    blk = lambda: np.zeros(100, dtype=np.uint8)
+    cache = LRUBlockCache(capacity_bytes=250, policy="cost")
+    cache.put(("g", 0, 0), blk())
+    cache.put(("g", 0, 1), blk())
+    assert cache.get(("g", 0, 0)) is not None  # refresh 0's recency
+    cache.put(("g", 0, 2), blk())  # must evict ("g",0,1), the LRU
+    assert ("g", 0, 1) not in cache
+    assert ("g", 0, 0) in cache and ("g", 0, 2) in cache
+
+
+def test_cost_aware_cache_refresh_demotes_repaired_blocks():
+    """After BlockFixer repairs the underlying block it is a cheap store
+    read again; refresh_cost drops its eviction priority in place."""
+    blk = lambda: np.zeros(100, dtype=np.uint8)
+    cache = LRUBlockCache(capacity_bytes=250, policy="cost")
+    cache.put(("g", 0, 0), blk(), cost=6.0)
+    cache.put(("g", 0, 1), blk(), cost=3.0)
+    cache.refresh_cost(("g", 0, 0), 1.0)  # repaired: now the cheapest
+    cache.put(("g", 0, 2), blk(), cost=1.0)
+    assert ("g", 0, 0) not in cache  # demoted entry is the victim
+    assert ("g", 0, 1) in cache and ("g", 0, 2) in cache
+
+
+def test_cost_aware_cache_clock_never_rolls_back():
+    """Evicting an entry whose score was demoted below the inflation
+    clock (via refresh_cost) must not deflate the clock — otherwise
+    fresh insertions get stale scores and are evicted before older
+    entries (recency inversion)."""
+    blk = lambda: np.zeros(100, dtype=np.uint8)
+    cache = LRUBlockCache(capacity_bytes=250, policy="cost")
+    cache.put(("g", 0, 0), blk(), cost=5.0)
+    cache.put(("g", 0, 1), blk(), cost=5.0)
+    cache.put(("g", 0, 2), blk(), cost=5.0)  # evicts 0, clock -> 5
+    cache.refresh_cost(("g", 0, 1), 0.1)  # score drops below the clock
+    cache.put(("g", 0, 3), blk(), cost=5.0)  # evicts 1; clock must hold
+    cache.put(("g", 0, 4), blk(), cost=5.0)  # must evict the OLDER 2
+    assert ("g", 0, 2) not in cache
+    assert ("g", 0, 3) in cache and ("g", 0, 4) in cache
+
+
+def test_gateway_repair_refreshes_cache_costs():
+    """End-to-end: a cached reconstruction keeps its rebuild cost while
+    the repair write-back is in flight, and is re-priced to 1.0 once the
+    heal completes in simulated time (the BlockFixer hook, deferred)."""
+    code = CoreCode(9, 6, 3)
+    gw = _gateway(
+        code,
+        cache_bytes=4 * 1024 * 1024,
+        batch_window=0.02,
+        repair_on_failure=True,
+        repair_delay=0.05,
+        background_share=0.5,
+    )
+    victim = gw.store.node_of(("g0", 0, 0))
+    key = ("g0", 0, 0)
+    reqs = [Request(time=0.03 + 0.001 * i, object_id=0) for i in range(5)]
+    report = gw.serve(reqs, [FailureEvent(time=0.01, node=victim)])
+    assert report.repair_reports
+    # the decoded block is cached at its vertical rebuild cost (t), and
+    # stays there while the write-back transfers are still in flight —
+    # it is the only copy pre-heal reads can use
+    assert key in gw.cache
+    assert gw.cache._cost[key] == code.t
+    assert key in gw._reprice_on_heal
+    # a read dated long after the heal completes triggers the re-price
+    report2 = gw.serve([Request(time=50.0, object_id=0)])
+    assert len(report2.completed) == 1
+    assert key in gw.cache
+    assert gw.cache._cost[key] == 1.0
+    assert key not in gw._reprice_on_heal
+
+
 # ---------------------------------------------------------------------------
 # workload + fabric sharing
 # ---------------------------------------------------------------------------
@@ -207,7 +295,12 @@ def test_netsim_rejects_zero_background_share():
 
 
 def test_netsim_priority_classes_share_ports_and_account_separately():
-    sim = NetSimulator(ClusterProfile.network_critical(), background_share=0.5)
+    # fifo mode: the PR-1 hold-until-done model with rate-throttled
+    # background; quantum (preemptive) sharing is covered in
+    # tests/test_netmodel.py
+    sim = NetSimulator(
+        ClusterProfile.network_critical(), background_share=0.5, mode="fifo"
+    )
     end_fg = sim.transfer(Transfer(0, 1, 12_000_000))  # 1s at 12 MB/s
     assert end_fg == pytest.approx(1.0)
     # background transfer on the same ports: waits, then runs at half rate
@@ -356,6 +449,90 @@ def test_gateway_repair_visible_only_after_transfers_complete():
     assert early.degraded  # write-back still in flight at t=0.032
     assert not late.degraded  # long after completion: healed
     assert len(report.completed) == 2
+
+
+@pytest.mark.parametrize("num_failures", [0, 1, 2])
+def test_pipelined_and_serial_paths_serve_identical_bytes(num_failures):
+    """Property: the pipelined dataplane changes WHEN things happen in
+    simulated time, never WHAT is served. Over a seeded Zipf workload
+    with 0/1/2 node failures, pipelined and serial runs must produce
+    byte-identical GET payloads (sha256) and identical verification /
+    degradation outcomes per request."""
+    code = CoreCode(9, 6, 3)
+    q = 1024
+    wl = WorkloadConfig(
+        num_objects=12, num_requests=150, arrival_rate=3000.0, seed=num_failures
+    )
+    reports = {}
+    for pipeline in ("pipelined", "serial"):
+        gw = _gateway(
+            code,
+            q=q,
+            batch_window=0.01,
+            pipeline=pipeline,
+            record_payloads=True,  # verify=True is the config default
+        )
+        # fail nodes that provably hold data blocks of live objects
+        # (placement is process-stable, so both runs fail the same nodes)
+        victims = [gw.store.node_of(("g0", 0, 0)), gw.store.node_of(("g1", 0, 2))]
+        failures = [
+            FailureEvent(time=0.01 + 0.015 * i, node=victims[i])
+            for i in range(num_failures)
+        ]
+        reports[pipeline] = gw.serve(generate_requests(wl), failures)
+    pipe, ser = reports["pipelined"].records, reports["serial"].records
+    assert len(pipe) == len(ser) == 150
+    for a, b in zip(pipe, ser):
+        assert (a.time, a.object_id, a.kind) == (b.time, b.object_id, b.kind)
+        assert a.degraded == b.degraded
+        assert (a.latency is None) == (b.latency is None)
+        assert a.payload_digest == b.payload_digest  # byte-identical GET
+        if a.latency is not None:
+            assert a.payload_digest is not None
+    if num_failures:
+        assert any(r.degraded for r in pipe)
+
+
+def test_pipelined_cache_hit_waits_for_decode_completion():
+    """Causality: a reconstruction is cached at host flush time, but a
+    later request hitting it in cache may not be served before the
+    decode's simulated completion."""
+    code = CoreCode(9, 6, 3)
+    gw = _gateway(
+        code, q=1 << 16, cache_bytes=32 * 1024 * 1024, batch_window=0.0001
+    )
+    gw.store.fail_nodes([gw.store.node_of(("g0", 0, 0))])
+    r1 = Request(time=0.001, object_id=0)  # decodes, caches the block
+    r2 = Request(time=0.0015, object_id=0)  # next window: cache hit
+    report = gw.serve([r1, r2])
+    key = ("g0", 0, 0)
+    ready = gw._cache_ready[key]  # simulated decode completion
+    rec1, rec2 = report.records
+    assert rec1.degraded and not rec2.degraded  # r2 planned off the cache
+    assert rec2.cache_hits >= 1
+    # fetching t=3 64 KiB source blocks takes ~5.5 ms simulated, so the
+    # decode finishes well after r2's arrival — r2 must wait for it
+    assert ready > r2.time
+    assert rec2.latency >= ready - r2.time - 1e-9
+
+
+def test_jit_cache_entries_bounded_over_500_requests():
+    """The coalescer's pad ladder caps distinct traced signatures: over a
+    500-request degraded run with organically varying batch sizes, the
+    jit-cache-entry counter stays within the ladder."""
+    from repro.gateway.coalescer import PAD_LADDER
+
+    code = CoreCode(9, 6, 3)
+    gw = _gateway(code, q=512, batch_window=0.01)
+    victim = gw.store.node_of(("g0", 0, 0))
+    reqs = generate_requests(
+        WorkloadConfig(num_objects=12, num_requests=500, arrival_rate=4000.0, seed=13)
+    )
+    report = gw.serve(reqs, [FailureEvent(time=0.005, node=victim)])
+    assert len(report.completed) == 500
+    st = gw.coalescer.stats
+    assert st.decode_calls > len(PAD_LADDER)  # plenty of traffic...
+    assert 0 < report.jit_cache_entries <= len(PAD_LADDER)  # ...few traces
 
 
 def test_gateway_unrecoverable_object_reported_not_crashing():

@@ -9,8 +9,12 @@ column, so the planner must fall back to the k-block RS path), a
 pipelined-vs-serial comparison on the degraded 1-failure workload (the
 staged dataplane against the strict-staging serial baseline), a
 preemptive-vs-FIFO fabric comparison under concurrent background repair
-(foreground p99 while repair transfers ride the same links), and the
-legacy fabric-contention rows.
+(foreground p99 while repair transfers ride the same links), the legacy
+fabric-contention rows, and the multi-tenant QoS rows (gateway_tenants):
+weighted-fair tenant tiers (per-tenant p99 ordering and starvation
+bounds), SLO admission control on/off (violation rate and rejections on
+a decode-bound degraded workload), and decode-engine scaling (the same
+workload with num_engines=4 vs 1).
 
 Results land in BENCH_gateway.json (stable keys) so the perf trajectory
 is tracked across PRs — benchmarks/run.py writes it on every --fast run.
@@ -26,14 +30,28 @@ from repro.core.product_code import CoreCode
 from repro.gateway import (
     GatewayConfig,
     ObjectGateway,
+    TenantProfile,
     WorkloadConfig,
     generate_requests,
+    generate_tenant_requests,
     plan_failures,
+    tenant_slo_map,
+    tenant_weight_map,
 )
 from repro.kernels import autotune
-from repro.storage.netmodel import ClusterProfile
+from repro.storage.netmodel import REPAIR_TENANT, ClusterProfile
 
 BENCH_PATH = "BENCH_gateway.json"
+
+# The three tenant tiers of the weighted-fair scenario: equal offered
+# load, fabric weights 1.0 / 0.5 / 0.2 — delivered latency must order
+# with the weights.
+TIERS = (
+    TenantProfile("gold", arrival_rate=100.0, weight=1.0),
+    TenantProfile("silver", arrival_rate=100.0, weight=0.5),
+    TenantProfile("bronze", arrival_rate=100.0, weight=0.2),
+)
+SLO_P99 = 0.15  # seconds; the admission scenario's latency target
 
 
 def _mk_gateway(code, num_nodes, q, num_objects, seed, **cfg_kw):
@@ -76,8 +94,11 @@ def _serve_row(bench, gw, wl_cfg, failures, since=0.0):
         "jit_entries": st.jit_entries,
         "decode_shapes": st.decode_shapes,
         "padded_ops": st.padded_ops,
-        "fg_bytes": gw.sim.class_bytes.get(0, 0),
-        "bg_bytes": gw.sim.class_bytes.get(1, 0),
+        # repair rides the "repair" tenant; everything else is foreground
+        "fg_bytes": sum(
+            v for k, v in gw.sim.class_bytes.items() if k != REPAIR_TENANT
+        ),
+        "bg_bytes": gw.sim.class_bytes.get(REPAIR_TENANT, 0),
     }
 
 
@@ -198,6 +219,138 @@ def run(fast: bool = True) -> list[dict]:
         row = _serve_row("gateway_contention", gw, wl, failures)
         row["background_share"] = share
         rows.append(row)
+
+    rows.extend(_run_tenant_rows(code, num_nodes, fast))
+    return rows
+
+
+def _mk_tenant_gateway(code, num_nodes, q, num_objects, profiles, seed, **cfg_kw):
+    cfg = GatewayConfig(
+        tenant_weights=tenant_weight_map(list(profiles)),
+        tenant_slo_p99=tenant_slo_map(list(profiles)),
+        **cfg_kw,
+    )
+    gw = ObjectGateway(
+        code, ClusterProfile.computation_critical(), num_nodes, cfg
+    )
+    rng = np.random.default_rng(seed)
+    gw.load_objects(
+        rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8)
+    )
+    return gw
+
+
+def _run_tenant_rows(code, num_nodes, fast: bool) -> list[dict]:
+    """Multi-tenant QoS scenarios (bench="gateway_tenants")."""
+    rows = []
+    q = 1 << 16  # multi-quantum blocks: fabric weights and decode both bite
+    num_objects = 30
+
+    # -- weighted-fair tiers: equal load, weights 1.0/0.5/0.2 ----------------
+    # network-critical links so the fabric (where the weights act) is the
+    # contended resource; one failure keeps reconstruction on the path.
+    cfg = GatewayConfig(
+        batch_window=0.02,
+        tenant_weights=tenant_weight_map(list(TIERS)),
+    )
+    gw = ObjectGateway(code, ClusterProfile.network_critical(), num_nodes, cfg)
+    rng = np.random.default_rng(3)
+    gw.load_objects(rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8))
+    n_per_tenant = 200 if fast else 600
+    reqs = generate_tenant_requests(list(TIERS), num_objects, n_per_tenant, seed=3)
+    failures = plan_failures(1, num_nodes, at_time=0.02, seed=3)
+    rep = gw.serve(reqs, failures)
+    rows.append(
+        {
+            "bench": "gateway_tenants",
+            "scenario": "tiers",
+            "requests": len(rep.records),
+            "completed": len(rep.completed),
+            "tenant_weights": {p.name: p.weight for p in TIERS},
+            "tenant_p50_ms": {
+                p.name: round(rep.tenant_latency_percentile(p.name, 50) * 1e3, 3)
+                for p in TIERS
+            },
+            "tenant_p99_ms": {
+                p.name: round(rep.tenant_latency_percentile(p.name, 99) * 1e3, 3)
+                for p in TIERS
+            },
+            # the simulator's starvation bound: worst queueing delay any
+            # of the tenant's transfers saw before its first quantum
+            "tenant_wait_max_ms": {
+                p.name: round(gw.sim.tenant_wait_max.get(p.name, 0.0) * 1e3, 3)
+                for p in TIERS
+            },
+        }
+    )
+
+    # -- SLO admission control on a decode-bound degraded workload -----------
+    # computation-critical profile (fat links, weak CPU) with six failed
+    # nodes: most GETs reconstruct, the decode-engine backlog is the
+    # latency driver, and the admission estimator can see it coming.
+    slo_tenant = TenantProfile(
+        "gold", arrival_rate=2000.0, weight=1.0, slo_p99=SLO_P99
+    )
+    n_slo = 600 if fast else 1500
+    engines_rps: dict[int, float] = {}
+    for admission in ("off", "reject"):
+        gw = _mk_tenant_gateway(
+            code, num_nodes, q, num_objects, [slo_tenant], seed=7,
+            batch_window=0.003, admission=admission,
+        )
+        reqs = generate_tenant_requests([slo_tenant], num_objects, n_slo, seed=7)
+        failures = plan_failures(6, num_nodes, at_time=0.01, spacing=0.0, seed=7)
+        rep = gw.serve(reqs, failures)
+        if admission == "off":
+            engines_rps[1] = rep.throughput
+        rows.append(
+            {
+                "bench": "gateway_tenants",
+                "scenario": "slo",
+                "admission": admission,
+                "slo_ms": SLO_P99 * 1e3,
+                "requests": len(rep.records),
+                "completed": len(rep.completed),
+                "rejected": rep.rejections.get("gold", 0),
+                "degraded_gets": len(rep.degraded_gets),
+                "throughput_rps": round(rep.throughput, 1),
+                "slo_violation_rate": round(
+                    rep.slo_violation_rate("gold", SLO_P99), 4
+                ),
+                "p99_ms": round(
+                    rep.tenant_latency_percentile("gold", 99) * 1e3, 3
+                ),
+                "deadline_miss_rate": round(
+                    gw.sim.deadline_miss_rate("gold"), 4
+                ),
+            }
+        )
+
+    # -- decode-engine scaling: same workload, 4 engines vs 1 ----------------
+    # (the num_engines=1 baseline IS the admission="off" run above —
+    # identical config, trace, and failure schedule.)
+    gw = _mk_tenant_gateway(
+        code, num_nodes, q, num_objects, [slo_tenant], seed=7,
+        batch_window=0.003, admission="off", num_engines=4,
+    )
+    reqs = generate_tenant_requests([slo_tenant], num_objects, n_slo, seed=7)
+    failures = plan_failures(6, num_nodes, at_time=0.01, spacing=0.0, seed=7)
+    rep = gw.serve(reqs, failures)
+    engines_rps[4] = rep.throughput
+    rows.append(
+        {
+            "bench": "gateway_tenants",
+            "scenario": "engines",
+            "num_engines": 4,
+            "requests": len(rep.records),
+            "completed": len(rep.completed),
+            "degraded_gets": len(rep.degraded_gets),
+            "throughput_rps": round(engines_rps[4], 1),
+            "throughput_rps_1_engine": round(engines_rps[1], 1),
+            "speedup": round(engines_rps[4] / max(engines_rps[1], 1e-9), 3),
+            "p99_ms": round(rep.tenant_latency_percentile("gold", 99) * 1e3, 3),
+        }
+    )
     return rows
 
 
@@ -240,6 +393,7 @@ def bench_summary(rows: list[dict]) -> dict:
                 fab["fifo"]["p99_ms"] / max(fab["quantum"]["p99_ms"], 1e-9), 3
             ),
         },
+        "gateway_tenants": _tenant_summary(rows),
         "jit_cache_entries": max(r.get("jit_entries", 0) for r in rows),
         # winners only — raw sweep timings are measurement noise and
         # would churn this committed file on every run
@@ -249,6 +403,38 @@ def bench_summary(rows: list[dict]) -> dict:
         },
     }
     return out
+
+
+def _tenant_summary(rows: list[dict]) -> dict:
+    """The gateway_tenants block of BENCH_gateway.json (stable keys)."""
+    tiers = [
+        r for r in rows
+        if r["bench"] == "gateway_tenants" and r["scenario"] == "tiers"
+    ][0]
+    slo = {
+        r["admission"]: r
+        for r in rows
+        if r["bench"] == "gateway_tenants" and r["scenario"] == "slo"
+    }
+    eng = [
+        r for r in rows
+        if r["bench"] == "gateway_tenants" and r["scenario"] == "engines"
+    ][0]
+    return {
+        "tenant_weights": tiers["tenant_weights"],
+        "tenant_p99_ms": tiers["tenant_p99_ms"],
+        "tenant_wait_max_ms": tiers["tenant_wait_max_ms"],
+        "slo_violation_rate": {
+            "off": slo["off"]["slo_violation_rate"],
+            "reject": slo["reject"]["slo_violation_rate"],
+        },
+        "slo_rejected": slo["reject"]["rejected"],
+        "engines_speedup": {
+            "rps_1": eng["throughput_rps_1_engine"],
+            "rps_4": eng["throughput_rps"],
+            "speedup": eng["speedup"],
+        },
+    }
 
 
 def write_bench(rows: list[dict], path: str = BENCH_PATH) -> None:
@@ -335,11 +521,11 @@ def check(rows: list[dict]) -> list[str]:
     jit_ok = all(
         0 < r["jit_entries"] <= len(PAD_LADDER) * r["decode_shapes"]
         for r in rows
-        if r["decode_calls"]
+        if r.get("decode_calls")
     )
     msgs.append(
         f"gateway: jit cache stays within the pad ladder "
-        f"(max {max(r['jit_entries'] for r in rows)} entries) "
+        f"(max {max(r.get('jit_entries', 0) for r in rows)} entries) "
         f"({'PASS' if jit_ok else 'FAIL'})"
     )
     # contention: repair bytes ride the shared fabric
@@ -349,6 +535,32 @@ def check(rows: list[dict]) -> list[str]:
         f"gateway: background repair shares the fabric "
         f"(bg bytes {[r['bg_bytes'] for r in cont]}) "
         f"({'PASS' if cont_ok else 'FAIL'})"
+    )
+    # multi-tenant QoS: per-tenant p99 orders with the fabric weights
+    ten = _tenant_summary(rows)
+    p99 = ten["tenant_p99_ms"]
+    order_ok = p99["gold"] < p99["silver"] < p99["bronze"]
+    msgs.append(
+        f"gateway: tenant p99 orders with weights 1.0/0.5/0.2 "
+        f"({p99['gold']:.0f} < {p99['silver']:.0f} < {p99['bronze']:.0f} ms) "
+        f"({'PASS' if order_ok else 'FAIL'})"
+    )
+    # SLO admission control cuts the violation rate on admitted traffic
+    viol = ten["slo_violation_rate"]
+    slo_ok = viol["reject"] < viol["off"] and ten["slo_rejected"] > 0
+    msgs.append(
+        f"gateway: SLO admission control cuts violations "
+        f"({viol['off']:.1%} -> {viol['reject']:.1%}, "
+        f"{ten['slo_rejected']} rejected) "
+        f"({'PASS' if slo_ok else 'FAIL'})"
+    )
+    # parallel decode engines: >= 1.5x throughput on the decode-bound load
+    eng = ten["engines_speedup"]
+    eng_ok = eng["speedup"] >= 1.5
+    msgs.append(
+        f"gateway: 4 decode engines beat 1 by >= 1.5x "
+        f"({eng['rps_1']:.0f} -> {eng['rps_4']:.0f} rps, "
+        f"{eng['speedup']:.2f}x) ({'PASS' if eng_ok else 'FAIL'})"
     )
     return msgs
 

@@ -29,7 +29,6 @@ def _time(fn, *args, reps=3) -> float:
 def run(fast: bool = True) -> list[dict]:
     rows = []
     n, k = 14, 12
-    code = rs.make_rs(n, k)
     parity = rs.parity_matrix(n, k)  # (m, k)
     sizes = [1 << 16, 1 << 20] if fast else [1 << 16, 1 << 20, 1 << 24]
     rng = np.random.default_rng(0)

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import logging
 import sys
 import time
 
@@ -32,6 +33,28 @@ MODULES = [
 FAST_MODULES = ["gateway_load", "kernels"]
 
 
+def ensure_headless_backend() -> str:
+    """tests/conftest.py-style optional-dependency guard, applied to the
+    accelerator backend: the CI benchmark smoke must run cleanly on a
+    machine with no TPU/GPU attached. jax 0.4.x announces a missing
+    accelerator through its module logger ('An NVIDIA GPU may be
+    present...'), which this quiets, and a half-installed CUDA stack can
+    make the default backend error outright — in that case fall back to
+    CPU explicitly, where the Pallas kernels take the interpreter path
+    and kernels/autotune.py runs its interpret sweep
+    (kernels/backend.resolve_interpret). Returns the backend name
+    actually in use."""
+    logging.getLogger("jax._src.xla_bridge").setLevel(logging.ERROR)
+    import jax
+
+    try:
+        return jax.default_backend()
+    except RuntimeError:
+        # env vars are read at import time, so flip the live config knob
+        jax.config.update("jax_platforms", "cpu")
+        return jax.default_backend()
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sample counts")
@@ -46,6 +69,7 @@ def main() -> int:
         mods = FAST_MODULES
     else:
         mods = MODULES
+    print(f"backend: {ensure_headless_backend()}")
     all_checks: list[str] = []
     failed = False
     for name in mods:

@@ -11,10 +11,22 @@ absorbs hot reconstructions, and background repair contends with
 foreground reads on the same simulated fabric — preemptively shared in
 fixed quanta, so a repair transfer cannot head-of-line-block a read.
 The serve path is the pipelined dataplane: window N+1's fetches overlap
-window N's decode launches on the simulated decode engine.
+window N's decode launches on the simulated decode-engine pool.
+
+Multi-tenant QoS (--tenants): every request carries a tenant tag; each
+tenant's fabric traffic is shaped by its weighted-fair quantum ratio
+(repair is just the "repair" tenant), tenants may declare a p99 latency
+SLO, and the admission controller rejects (or degrades to the
+latency-cheapest plan) any GET whose estimated queue + decode time
+would bust its tenant's target. The demo runs a premium tenant with an
+SLO against a throttled batch tenant and prints per-tenant latency,
+rejection, and starvation accounting.
 
     PYTHONPATH=src python examples/gateway_serving.py
+    PYTHONPATH=src python examples/gateway_serving.py --tenants
 """
+
+import argparse
 
 import numpy as np
 
@@ -22,11 +34,15 @@ from repro.core.product_code import CoreCode
 from repro.gateway import (
     GatewayConfig,
     ObjectGateway,
+    TenantProfile,
     WorkloadConfig,
     generate_requests,
+    generate_tenant_requests,
     plan_failures,
+    tenant_slo_map,
+    tenant_weight_map,
 )
-from repro.storage.netmodel import ClusterProfile
+from repro.storage.netmodel import REPAIR_TENANT, ClusterProfile
 
 
 def main():
@@ -76,10 +92,63 @@ def main():
           f"{st.jit_entries} jit entries)")
     print(f"  block cache     {gw.cache.stats.hits:8d} hits / "
           f"{gw.cache.stats.misses} misses ({gw.cache.stats.hit_rate:.0%})")
-    print(f"  fabric          {gw.sim.class_bytes.get(0, 0)/1e6:8.1f} MB "
-          f"foreground, {gw.sim.class_bytes.get(1, 0)/1e6:.1f} MB background "
-          f"repair ({len(report.repair_reports)} repair runs)")
+    fg_mb = sum(
+        v for k, v in gw.sim.class_bytes.items() if k != REPAIR_TENANT
+    ) / 1e6
+    print(f"  fabric          {fg_mb:8.1f} MB foreground, "
+          f"{gw.sim.class_bytes.get(REPAIR_TENANT, 0)/1e6:.1f} MB "
+          f"background repair ({len(report.repair_reports)} repair runs)")
+
+
+def main_tenants():
+    """Two-tenant QoS demo: a premium tenant with a latency SLO shares
+    the fabric with a heavily throttled batch tenant."""
+    code = CoreCode(9, 6, 3)
+    num_objects, q, num_nodes = 30, 1 << 14, 60
+    rng = np.random.default_rng(0)
+    profiles = [
+        TenantProfile("premium", arrival_rate=400.0, weight=1.0, slo_p99=0.1),
+        TenantProfile("batch", arrival_rate=400.0, weight=0.25),
+    ]
+    cfg = GatewayConfig(
+        batch_window=0.02,
+        tenant_weights=tenant_weight_map(profiles),
+        tenant_slo_p99=tenant_slo_map(profiles),
+        admission="reject",
+    )
+    gw = ObjectGateway(code, ClusterProfile.network_critical(), num_nodes, cfg)
+    gw.load_objects(rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8))
+
+    print(f"CORE ({code.n},{code.k},{code.t}) cluster, two tenants: "
+          + ", ".join(f"{p.name} (weight {p.weight}"
+                      + (f", SLO p99 {p.slo_p99*1e3:.0f} ms)" if p.slo_p99 else ")")
+                      for p in profiles))
+    reqs = generate_tenant_requests(profiles, num_objects, 300, seed=1)
+    failures = plan_failures(1, num_nodes, at_time=0.1, seed=4)
+    report = gw.serve(reqs, failures)
+
+    for p in profiles:
+        done = report.tenant_completed(p.name)
+        print(f"\n  {p.name}:")
+        print(f"    completed       {len(done):6d} / "
+              f"{sum(1 for r in reqs if r.tenant == p.name)}"
+              f"  (rejected {report.rejections.get(p.name, 0)})")
+        print(f"    latency p50/p99 {report.tenant_latency_percentile(p.name, 50)*1e3:8.2f}"
+              f" / {report.tenant_latency_percentile(p.name, 99)*1e3:.2f} ms")
+        if p.slo_p99:
+            print(f"    SLO violations  "
+                  f"{report.slo_violation_rate(p.name, p.slo_p99):8.1%} of admitted"
+                  f"  (fabric deadline misses "
+                  f"{gw.sim.deadline_miss_rate(p.name):.1%})")
+        print(f"    worst fabric queueing "
+              f"{gw.sim.tenant_wait_max.get(p.name, 0.0)*1e3:.2f} ms")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", action="store_true",
+                    help="two-tenant QoS demo (weights + SLO admission)")
+    if ap.parse_args().tenants:
+        main_tenants()
+    else:
+        main()

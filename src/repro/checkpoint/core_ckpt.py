@@ -29,7 +29,7 @@ from repro.checkpoint import partition
 from repro.core.product_code import CoreCode, CoreCodec
 from repro.storage.blockstore import BlockStore
 from repro.storage.netmodel import ClusterProfile
-from repro.storage.repair import BlockFixer, RepairReport, UnrecoverableError
+from repro.storage.repair import BlockFixer, RepairReport
 
 
 @dataclass

@@ -9,10 +9,9 @@ stripe); t objects form one CORE group (the cross-object dimension).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
-import jax.numpy as jnp
 import ml_dtypes  # registers bfloat16/fp8 dtype strings with numpy
 import numpy as np
 

@@ -24,7 +24,7 @@ import numpy as np
 from repro.coding import lrc as lrc_mod
 from repro.core.product_code import CoreCode
 from repro.core.recoverability import is_recoverable
-from repro.core.scheduling import Schedule, schedule_rgs
+from repro.core.scheduling import schedule_rgs
 
 # ---------------------------------------------------------------------------
 # §5.1 static resilience (closed forms)

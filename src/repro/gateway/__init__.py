@@ -2,8 +2,23 @@
 # cluster: Zipf/Poisson workloads, per-request degraded-read planning
 # (paper Table 1), a pipelined fetch->decode->verify dataplane with
 # shape-bucketed batched GF(256) decode (ladder-padded, autotuned,
-# bounded jit cache), rebuild-cost-aware block caching, and preemptive
-# quantum fabric sharing between foreground reads and background repair.
+# bounded jit cache), rebuild-cost-aware block caching, and weighted-fair
+# quantum fabric sharing between any number of tenants.
+#
+# Tenancy and SLOs: every request is tagged with a tenant; each tenant's
+# fabric traffic is shaped by its weighted-fair quantum ratio
+# (GatewayConfig.tenant_weights — background repair is just the "repair"
+# tenant, whose weight defaults to background_share), and tenants may
+# declare a p99 latency target (tenant_slo_p99). The admission
+# controller estimates each arriving GET's completion time from the
+# client-NIC fetch serialization, the decode-engine backlog, and the
+# measured per-launch decode cost; requests that would bust their
+# tenant's SLO are rejected up front (admission="reject") or first
+# degraded to the latency-cheapest viable plan (admission="degrade").
+# Decode runs on num_engines parallel simulated engine timelines with
+# least-loaded dispatch, so decode-bound degraded workloads scale with
+# the engine pool. Per-tenant latency, rejection, starvation, and
+# deadline-miss accounting surface in GatewayReport and NetSimulator.
 from repro.gateway.cache import CacheStats, LRUBlockCache
 from repro.gateway.coalescer import PAD_LADDER, CoalescerStats, DecodeCoalescer
 from repro.gateway.gateway import (
@@ -19,15 +34,25 @@ from repro.gateway.planner import (
     UnreadableObjectError,
 )
 from repro.gateway.workload import (
+    DEFAULT_TENANT,
     FailureEvent,
     Request,
+    TenantProfile,
     WorkloadConfig,
     generate_requests,
+    generate_tenant_requests,
     plan_failures,
+    tenant_slo_map,
+    tenant_weight_map,
     zipf_probs,
 )
 
 __all__ = [
+    "DEFAULT_TENANT",
+    "TenantProfile",
+    "generate_tenant_requests",
+    "tenant_slo_map",
+    "tenant_weight_map",
     "CacheStats",
     "LRUBlockCache",
     "PAD_LADDER",

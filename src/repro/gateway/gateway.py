@@ -5,10 +5,24 @@ Requests (Poisson arrivals) are grouped into small batching windows; each
 window's GETs are planned against the live failure set (planner.py) and
 their reconstructions coalesced into batched kernel launches
 (coalescer.py). Every byte moved rides the shared NetSimulator fabric —
-where background repair traffic (BlockFixer at BACKGROUND priority)
+where background repair traffic (BlockFixer as the "repair" tenant)
 contends with foreground reads, instead of running in a separate
 universe. Block contents are real; every degraded GET is verified
 against ground truth.
+
+Multi-tenant QoS: every request carries a tenant tag, and each tenant's
+fabric transfers ride the quantum scheduler under that tenant's
+weighted-fair ratio (``GatewayConfig.tenant_weights`` — repair is just
+another tenant whose weight defaults to ``background_share``). Tenants
+may declare a p99 latency SLO (``tenant_slo_p99``); the admission
+controller estimates an arriving GET's completion time (client-NIC fetch
+serialization + decode-engine backlog + measured per-launch decode cost)
+and, when the estimate busts the tenant's SLO, either rejects the
+request up front (``admission="reject"``) or first degrades it to the
+latency-cheapest viable plan (``admission="degrade"``, re-ranking the
+planner's candidates by estimated time instead of Table-1 bytes) and
+rejects only if even that plan busts the target. Rejections are tracked
+per tenant in ``GatewayReport.rejections``.
 
 Pipeline stages (config.pipeline):
 
@@ -19,10 +33,11 @@ Pipeline stages (config.pipeline):
      transfers at quantum granularity instead of queueing behind them.
   2. **decode**  — reconstructions are deduped across the window, shape-
      bucketed, and executed as stacked Pallas launches whose wall time
-     is measured per bucket. Launches occupy a serial simulated decode
-     engine; each bucket's launch is issued as soon as THAT bucket's
-     source transfers complete and the engine frees — not after the
-     whole window's fetches.
+     is measured per launch. Launches are dispatched least-loaded-first
+     onto ``num_engines`` parallel simulated decode-engine timelines
+     (multi-core / multi-chip serving); each launch is issued as soon as
+     its bucket's source transfers complete and an engine frees — not
+     after the whole window's fetches.
   3. **verify / deliver** — each GET completes at the max of its direct
      fetches and the decode launches it depends on; contents are checked
      against ground truth host-side (zero simulated cost).
@@ -69,19 +84,28 @@ from repro.gateway.planner import (
     ReadPlan,
     UnreadableObjectError,
 )
-from repro.gateway.workload import FailureEvent, Request
+from repro.gateway.workload import DEFAULT_TENANT, FailureEvent, Request
 from repro.storage.blockstore import BlockKey, BlockStore
 from repro.storage.netmodel import (
-    BACKGROUND,
-    FOREGROUND,
     ClusterProfile,
     NetSimulator,
+    REPAIR_TENANT,
     Transfer,
 )
 from repro.storage.repair import BlockFixer
 
 PIPELINED = "pipelined"
 SERIAL = "serial"
+
+# Admission-control policies (GatewayConfig.admission):
+#   off     — admit everything (SLOs are observed, never enforced)
+#   reject  — refuse a GET whose estimated completion busts its SLO
+#   degrade — first re-rank the planner's candidate plans by estimated
+#             completion time and take the cheapest; reject only if even
+#             that plan busts the SLO
+ADMIT_OFF = "off"
+ADMIT_REJECT = "reject"
+ADMIT_DEGRADE = "degrade"
 
 
 @dataclass(frozen=True)
@@ -99,6 +123,11 @@ class GatewayConfig:
     pipeline: str = PIPELINED  # "pipelined" | "serial" (PR-1 loop)
     autotune: bool = True  # measured kernel-parameter sweep at first use
     record_payloads: bool = False  # sha256 of every GET payload in records
+    # -- multi-tenant QoS ------------------------------------------------------
+    tenant_weights: dict | None = None  # tenant -> fabric quantum ratio
+    tenant_slo_p99: dict | None = None  # tenant -> p99 latency target (s)
+    admission: str = ADMIT_OFF  # "off" | "reject" | "degrade"
+    num_engines: int = 1  # parallel simulated decode engines
 
 
 @dataclass
@@ -106,12 +135,14 @@ class RequestRecord:
     time: float
     object_id: int
     kind: str
-    latency: float | None  # None => unrecoverable
+    latency: float | None  # None => unrecoverable or rejected
     degraded: bool
     bytes_read: int  # fabric bytes moved for this request
     reconstruction_blocks: int  # planner's Table-1 traffic
     cache_hits: int
     payload_digest: str | None = None  # sha256 (record_payloads=True)
+    tenant: str = DEFAULT_TENANT
+    rejected: bool = False  # refused by SLO admission control
 
 
 @dataclass
@@ -119,6 +150,7 @@ class GatewayReport:
     records: list[RequestRecord] = field(default_factory=list)
     repair_reports: list = field(default_factory=list)
     jit_cache_entries: int = 0  # coalescer's traced-signature count
+    rejections: dict = field(default_factory=dict)  # tenant -> refused GETs
 
     # -- aggregates -----------------------------------------------------------
     @property
@@ -129,9 +161,36 @@ class GatewayReport:
     def degraded_gets(self) -> list[RequestRecord]:
         return [r for r in self.completed if r.kind == "get" and r.degraded]
 
+    @property
+    def rejected(self) -> list[RequestRecord]:
+        return [r for r in self.records if r.rejected]
+
     def latency_percentile(self, q: float, since: float = 0.0) -> float:
         lats = [r.latency for r in self.completed if r.time >= since]
         return float(np.percentile(lats, q)) if lats else 0.0
+
+    # -- per-tenant aggregates -------------------------------------------------
+    def tenant_completed(self, tenant: str) -> list[RequestRecord]:
+        return [r for r in self.completed if r.tenant == tenant]
+
+    def tenant_latency_percentile(
+        self, tenant: str, q: float, since: float = 0.0
+    ) -> float:
+        lats = [
+            r.latency
+            for r in self.completed
+            if r.tenant == tenant and r.time >= since
+        ]
+        return float(np.percentile(lats, q)) if lats else 0.0
+
+    def slo_violation_rate(self, tenant: str, slo: float) -> float:
+        """Fraction of this tenant's completed GETs that finished over
+        the target — measured over ADMITTED traffic, so rejections trade
+        availability for the survivors' latency."""
+        gets = [r for r in self.tenant_completed(tenant) if r.kind == "get"]
+        if not gets:
+            return 0.0
+        return sum(1 for r in gets if r.latency > slo) / len(gets)
 
     @property
     def throughput(self) -> float:
@@ -174,11 +233,29 @@ class ObjectGateway:
                 f"pipeline must be 'pipelined' or 'serial', got "
                 f"{self.config.pipeline!r}"
             )
+        if self.config.admission not in (ADMIT_OFF, ADMIT_REJECT, ADMIT_DEGRADE):
+            raise ValueError(
+                f"admission must be 'off', 'reject' or 'degrade', got "
+                f"{self.config.admission!r}"
+            )
+        if self.config.num_engines < 1:
+            raise ValueError(
+                f"num_engines must be >= 1, got {self.config.num_engines}"
+            )
+        if self.config.pipeline == SERIAL and self.config.num_engines != 1:
+            # the serial baseline prices the PR-1 synchronous loop, which
+            # had exactly one decode engine — extra engines would sit
+            # idle while still skewing the admission estimator
+            raise ValueError(
+                "pipeline='serial' models a single-engine synchronous "
+                f"loop; num_engines must be 1, got {self.config.num_engines}"
+            )
         self.store = BlockStore(num_nodes=num_nodes)
         self.sim = NetSimulator(
             profile,
             background_share=self.config.background_share,
             mode=self.config.fabric,
+            tenant_weights=self.config.tenant_weights,
         )
         self.cache = (
             LRUBlockCache(self.config.cache_bytes, policy=self.config.cache_policy)
@@ -199,7 +276,7 @@ class ObjectGateway:
             profile,
             mode="core",
             sim=self.sim,
-            priority=BACKGROUND,
+            priority=REPAIR_TENANT,
             on_block_repaired=self._on_block_repaired,
         )
         self._objects: dict[int, tuple[str, int]] = {}  # object -> (group, row)
@@ -221,9 +298,10 @@ class ObjectGateway:
         # yet in simulated time.
         self._cache_ready: dict[BlockKey, float] = {}
         self._clock = 0.0  # logical time of the request being planned
-        # Simulated serial decode engine: one batched launch at a time;
+        # Simulated decode engines: each runs one batched launch at a
+        # time; launches dispatch to the least-loaded engine. The pool
         # persists across windows so pipelined windows overlap on it.
-        self._engine_free = 0.0
+        self._engines = [0.0] * self.config.num_engines
         # Serial-mode barrier: completion time of the previous window.
         self._window_free = 0.0
 
@@ -355,13 +433,17 @@ class ObjectGateway:
         # gone) are pinned at plan time — later fetches in this window
         # may otherwise evict them before their request executes.
         pinned: dict[BlockKey, np.ndarray] = {}
+        slos = self.config.tenant_slo_p99 or {}
         for req in batch:
             # serve() handles PUTs as window barriers before batching;
             # a PUT inside a window would break the pin/plan invariants
             assert req.kind == "get", f"batch may only hold GETs, got {req.kind}"
             if req.object_id not in self._objects:
                 report.records.append(
-                    RequestRecord(req.time, req.object_id, "get", None, False, 0, 0, 0)
+                    RequestRecord(
+                        req.time, req.object_id, "get", None, False, 0, 0, 0,
+                        tenant=req.tenant,
+                    )
                 )
                 continue
             gid, row = self._objects[req.object_id]
@@ -370,9 +452,39 @@ class ObjectGateway:
                 plan = self.planner.plan(gid, row, at=req.time)
             except UnreadableObjectError:
                 report.records.append(
-                    RequestRecord(req.time, req.object_id, "get", None, True, 0, 0, 0)
+                    RequestRecord(
+                        req.time, req.object_id, "get", None, True, 0, 0, 0,
+                        tenant=req.tenant,
+                    )
                 )
                 continue
+            # SLO admission: estimate queue + transfer + decode time for
+            # the plan; degrade mode first re-ranks the planner's
+            # candidates by that estimate (a backlogged engine can make
+            # the Table-1 byte-cheapest plan the latency-dearest one).
+            slo = slos.get(req.tenant)
+            if slo is not None and self.config.admission != ADMIT_OFF:
+                est = self._estimate_service_time(plan, req.time, req.tenant)
+                if est > slo and self.config.admission == ADMIT_DEGRADE:
+                    plan, est = min(
+                        (
+                            (p, self._estimate_service_time(p, req.time, req.tenant))
+                            for p in self.planner.candidates(gid, row, at=req.time)
+                        ),
+                        key=lambda pe: pe[1],
+                    )
+                if est > slo:
+                    report.rejections[req.tenant] = (
+                        report.rejections.get(req.tenant, 0) + 1
+                    )
+                    report.records.append(
+                        RequestRecord(
+                            req.time, req.object_id, "get", None,
+                            plan.degraded, 0, 0, 0,
+                            tenant=req.tenant, rejected=True,
+                        )
+                    )
+                    continue
             if self.cache is not None:
                 for key in plan.source_keys:
                     if key not in pinned and not self.store.available(key):
@@ -399,6 +511,12 @@ class ObjectGateway:
                 if serial
                 else plan.planned_at
             )
+            # SLO tenants stamp their fabric transfers with a deadline so
+            # the simulator's per-tenant miss counters line up with the
+            # report's violation rates.
+            deadline = (
+                req.time + slos[req.tenant] if req.tenant in slos else None
+            )
             key_ready: dict[BlockKey, float] = {}
             nbytes = 0
             hits = 0
@@ -417,7 +535,8 @@ class ObjectGateway:
                             client,
                             blk.nbytes,
                             fetch_at,
-                            priority=FOREGROUND,
+                            tenant=req.tenant,
+                            deadline=deadline,
                         )
                     )
                     key_ready[key] = end
@@ -459,26 +578,34 @@ class ObjectGateway:
         decode_done: dict[tuple, float] = {}
         if serial:
             # strict staging: no launch before ALL the window's transfers
-            # (even direct-only fetches) complete; launches back-to-back;
-            # the whole window waits for the last launch.
+            # (even direct-only fetches) complete; launches back-to-back
+            # on ONE engine (the synchronous loop this baseline prices
+            # had no decode parallelism); the whole window waits for the
+            # last launch.
             window_net = max(
                 (t for key_ready in ready for t in key_ready.values()),
                 default=self._window_free,
             )
-            start = max(window_net, self._engine_free)
-            end = start + sum(bucket_compute.values())
+            start = max(window_net, self._engines[0])
+            end = start + sum(sum(v) for v in bucket_compute.values())
             for key in bucket_ready:
                 decode_done[key] = end
             if bucket_compute:
-                self._engine_free = end
+                self._engines[0] = end
         else:
-            # pipelined: issue each bucket as soon as its own sources
-            # land and the engine frees, in source-arrival order
+            # pipelined: issue each bucket's launches as soon as its own
+            # sources land, in source-arrival order, each launch onto the
+            # least-loaded decode engine — windows (and a bucket's
+            # top-rung split chunks) overlap across the engine pool
             for key in sorted(bucket_ready, key=bucket_ready.get):
-                start = max(bucket_ready[key], self._engine_free)
-                end = start + bucket_compute[key]
-                decode_done[key] = end
-                self._engine_free = end
+                key_done = 0.0
+                for dt in bucket_compute[key]:
+                    e = min(range(len(self._engines)), key=self._engines.__getitem__)
+                    start = max(bucket_ready[key], self._engines[e])
+                    end = start + dt
+                    self._engines[e] = end
+                    key_done = max(key_done, end)
+                decode_done[key] = key_done
 
         # 3) verify + deliver
         decoded_per_req: list[dict[int, np.ndarray]] = [dict() for _ in gets]
@@ -530,6 +657,7 @@ class ObjectGateway:
                     plan.reconstruction_blocks,
                     cache_hits[i],
                     payload_digest=digest,
+                    tenant=req.tenant,
                 )
             )
             window_end = max(window_end, done)
@@ -543,7 +671,9 @@ class ObjectGateway:
         both codes — no other row is touched)."""
         oid = req.object_id
         if oid not in self._objects:
-            return RequestRecord(req.time, oid, "put", None, False, 0, 0, 0)
+            return RequestRecord(
+                req.time, oid, "put", None, False, 0, 0, 0, tenant=req.tenant
+            )
         gid, row = self._objects[oid]
         q = self._block_bytes
         rng = np.random.default_rng((oid * 1_000_003 + int(req.time * 1e6)) % (2**63))
@@ -572,7 +702,7 @@ class ObjectGateway:
                         self.store.node_of(par_key),
                         int(q),
                         req.time,
-                        priority=FOREGROUND,
+                        tenant=req.tenant,
                     )
                 )
                 done = max(done, end)
@@ -584,7 +714,7 @@ class ObjectGateway:
                     self.store.node_of(old_key),
                     int(q),
                     req.time,
-                    priority=FOREGROUND,
+                    tenant=req.tenant,
                 )
             )
             done = max(done, end)
@@ -599,7 +729,8 @@ class ObjectGateway:
             self._reprice_on_heal.discard(par_key)
         self._expected[oid] = new_data
         return RequestRecord(
-            req.time, oid, "put", done - req.time, False, nbytes, 0, 0
+            req.time, oid, "put", done - req.time, False, nbytes, 0, 0,
+            tenant=req.tenant,
         )
 
     # -- background repair -------------------------------------------------------
@@ -617,10 +748,52 @@ class ObjectGateway:
             report.repair_reports.append(self.fixer.fix_group(gid))
             # repaired blocks stay invisible to reads until the repair's
             # background transfers actually complete on the fabric
-            done = self.sim.class_makespan.get(BACKGROUND, at_time)
+            done = self.sim.class_makespan.get(REPAIR_TENANT, at_time)
             for key in missing:
                 if self.store.available(key):
                     self._healing[key] = done
+
+    # -- SLO admission estimator -------------------------------------------------
+    def _decode_launch_estimate(self) -> float:
+        """Expected scaled wall time of one batched decode launch, from
+        the coalescer's measured history (0 until the first launch —
+        optimistic, so cold-start traffic is admitted)."""
+        st = self.coalescer.stats
+        return st.compute_time / st.decode_calls if st.decode_calls else 0.0
+
+    def _estimate_service_time(
+        self, plan: ReadPlan, now: float, tenant: str
+    ) -> float:
+        """Estimated completion time for a GET arriving ``now``: source
+        blocks not in cache serialize into the request's single client
+        NIC at the tenant's GUARANTEED fair-share rate, behind the
+        tenant's own most-backlogged source-port cursor (reservations of
+        lighter tenants are preemptible under the quantum fabric, so
+        they don't count against it), and a degraded plan then waits for
+        the least-loaded decode engine's backlog plus its own launches.
+        O(plan) on purpose — an admission decision may not re-run the
+        simulation — so it uses the simulator's per-(port, tenant)
+        cursors rather than exact timeline search."""
+        fetch_bytes = 0
+        net_backlog = 0.0
+        for key in plan.source_keys:
+            if self.cache is not None and key in self.cache:
+                continue
+            fetch_bytes += self._block_bytes
+            net_backlog = max(
+                net_backlog,
+                self.sim.send_backlog(self.store.node_of(key), tenant, now),
+            )
+        share = self.sim.weight_of(tenant)
+        est = net_backlog + fetch_bytes / (share * self.profile.node_bandwidth)
+        if self.config.pipeline == SERIAL:
+            # serial mode gates every fetch on the previous window's
+            # completion — under load that barrier IS the latency
+            est += max(0.0, self._window_free - now)
+        if plan.decodes:
+            est += max(0.0, min(self._engines) - now)
+            est += self._decode_launch_estimate() * len(plan.decodes)
+        return est
 
     # -- helpers ----------------------------------------------------------------
     def _client_port(self, req: Request) -> int:

@@ -89,6 +89,21 @@ class DegradedReadPlanner:
         self._available = available_fn if available_fn is not None else store.available
 
     def plan(self, group_id: str, row: int, at: float = 0.0) -> ReadPlan:
+        """The Table-1-cheapest viable plan (first candidate)."""
+        return self.candidates(group_id, row, at=at)[0]
+
+    def candidates(
+        self, group_id: str, row: int, at: float = 0.0
+    ) -> tuple[ReadPlan, ...]:
+        """Every viable plan for this read against the live failure set,
+        Table-1-cheapest first. A healthy object has exactly one (all
+        direct); a degraded one has the vertical plan (t sources per
+        missing block) and/or the horizontal plan (k sources covering
+        the whole row). The gateway's SLO admission controller re-ranks
+        these by *estimated completion time* when a request is about to
+        bust its tenant's latency target — under a backlogged decode
+        engine the Table-1 byte-cheapest plan is not always the
+        latency-cheapest one."""
         code = self.code
         k, n = code.k, code.n
         avail_data = [
@@ -97,7 +112,7 @@ class DegradedReadPlanner:
         missing = [c for c in range(k) if c not in avail_data]
         direct = tuple((group_id, row, c) for c in avail_data)
         if not missing:
-            return ReadPlan(group_id, row, direct, (), planned_at=at)
+            return (ReadPlan(group_id, row, direct, (), planned_at=at),)
 
         vertical_ok = all(self._column_intact(group_id, row, c) for c in missing)
         avail_row = [
@@ -105,27 +120,40 @@ class DegradedReadPlanner:
         ]
         horizontal_ok = len(avail_row) >= k
 
-        # Table 1: vertical = t reads per block, horizontal = k reads for
-        # the whole row. Prefer vertical on ties (pure XOR vs GF decode).
-        v_cost = code.t * len(missing)
-        if vertical_ok and (not horizontal_ok or v_cost <= k):
-            decodes = tuple(
-                self._vertical_op(group_id, row, c) for c in missing
+        vertical = (
+            ReadPlan(
+                group_id,
+                row,
+                direct,
+                tuple(self._vertical_op(group_id, row, c) for c in missing),
+                planned_at=at,
             )
-            return ReadPlan(group_id, row, direct, decodes, planned_at=at)
-        if horizontal_ok:
-            return ReadPlan(
+            if vertical_ok
+            else None
+        )
+        horizontal = (
+            ReadPlan(
                 group_id,
                 row,
                 direct,
                 (self._horizontal_op(group_id, row, avail_row, missing),),
                 planned_at=at,
             )
-        if vertical_ok:
-            decodes = tuple(
-                self._vertical_op(group_id, row, c) for c in missing
+            if horizontal_ok
+            else None
+        )
+        # Table 1: vertical = t reads per block, horizontal = k reads for
+        # the whole row. Prefer vertical on ties (pure XOR vs GF decode).
+        v_cost = code.t * len(missing)
+        if vertical is not None and horizontal is not None:
+            ordered = (
+                (vertical, horizontal) if v_cost <= k else (horizontal, vertical)
             )
-            return ReadPlan(group_id, row, direct, decodes, planned_at=at)
+            return ordered
+        if vertical is not None:
+            return (vertical,)
+        if horizontal is not None:
+            return (horizontal,)
         raise UnreadableObjectError(
             f"object ({group_id}, row {row}): columns {missing} broken and "
             f"only {len(avail_row)} < k={k} row blocks survive"

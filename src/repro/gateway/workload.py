@@ -5,13 +5,22 @@ catalog — the shape measured for blob/photo stores and the warehouse
 traces the paper's related work studies), arrivals are Poisson, and node
 failures are injected at configurable times. Everything is generated
 host-side with numpy from a single seed so runs are reproducible.
+
+Multi-tenant traces: each ``TenantProfile`` describes one tenant's
+arrival rate, popularity skew, and fabric weight / latency SLO;
+``generate_tenant_requests`` draws an independent Poisson/Zipf stream
+per tenant over the shared catalog and merges them by arrival time, so
+the gateway sees one interleaved trace of tenant-tagged requests.
 """
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
+
+DEFAULT_TENANT = "foreground"
 
 
 @dataclass(frozen=True)
@@ -19,6 +28,7 @@ class Request:
     time: float  # arrival (seconds since epoch 0 of the trace)
     object_id: int
     kind: str = "get"  # get | put
+    tenant: str = DEFAULT_TENANT  # fabric/SLO tenant this request bills to
 
 
 @dataclass(frozen=True)
@@ -44,7 +54,9 @@ def zipf_probs(num_objects: int, s: float) -> np.ndarray:
     return w / w.sum()
 
 
-def generate_requests(cfg: WorkloadConfig) -> list[Request]:
+def generate_requests(
+    cfg: WorkloadConfig, tenant: str = DEFAULT_TENANT
+) -> list[Request]:
     rng = np.random.default_rng(cfg.seed)
     gaps = rng.exponential(1.0 / cfg.arrival_rate, size=cfg.num_requests)
     times = np.cumsum(gaps)
@@ -54,9 +66,69 @@ def generate_requests(cfg: WorkloadConfig) -> list[Request]:
     ranks = rng.choice(cfg.num_objects, size=cfg.num_requests, p=zipf_probs(cfg.num_objects, cfg.zipf_s))
     kinds = np.where(rng.random(cfg.num_requests) < cfg.put_fraction, "put", "get")
     return [
-        Request(time=float(times[i]), object_id=int(perm[ranks[i]]), kind=str(kinds[i]))
+        Request(
+            time=float(times[i]),
+            object_id=int(perm[ranks[i]]),
+            kind=str(kinds[i]),
+            tenant=tenant,
+        )
         for i in range(cfg.num_requests)
     ]
+
+
+@dataclass(frozen=True)
+class TenantProfile:
+    """One tenant's traffic shape and service terms.
+
+    ``weight`` is the fabric's weighted-fair quantum ratio (netmodel
+    tenant_weights); ``slo_p99`` is the latency target (seconds) the
+    gateway's admission controller enforces for this tenant (None =>
+    best-effort, never rejected).
+    """
+
+    name: str
+    arrival_rate: float  # requests/sec (Poisson)
+    weight: float = 1.0
+    zipf_s: float = 1.1
+    put_fraction: float = 0.0
+    slo_p99: float | None = None
+
+    def workload(self, num_objects: int, num_requests: int, seed: int) -> WorkloadConfig:
+        return WorkloadConfig(
+            num_objects=num_objects,
+            num_requests=num_requests,
+            arrival_rate=self.arrival_rate,
+            zipf_s=self.zipf_s,
+            put_fraction=self.put_fraction,
+            seed=seed,
+        )
+
+
+def tenant_weight_map(profiles: list[TenantProfile]) -> dict[str, float]:
+    return {p.name: p.weight for p in profiles}
+
+
+def tenant_slo_map(profiles: list[TenantProfile]) -> dict[str, float]:
+    return {p.name: p.slo_p99 for p in profiles if p.slo_p99 is not None}
+
+
+def generate_tenant_requests(
+    profiles: list[TenantProfile],
+    num_objects: int,
+    num_requests_per_tenant: int,
+    seed: int = 0,
+) -> list[Request]:
+    """Independent Poisson/Zipf stream per tenant over the shared object
+    catalog, merged by arrival time. Sub-seeds derive from the tenant
+    NAME (not list position), so a tenant's stream stays stable when
+    other tenants are added, dropped, or reordered."""
+    merged: list[Request] = []
+    for prof in profiles:
+        sub_seed = (seed * 7919 + zlib.crc32(prof.name.encode())) % (2**31)
+        wl = prof.workload(num_objects, num_requests_per_tenant, seed=sub_seed)
+        merged.extend(generate_requests(wl, tenant=prof.name))
+    merged.sort(key=lambda r: r.time)
+    return merged
 
 
 def plan_failures(

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.data.pipeline import batch_specs, shapes_for_cell
 from repro.models.registry import ModelApi
-from repro.models.shardings import MeshAxes, ServePlan, make_serve_plan
+from repro.models.shardings import MeshAxes, make_serve_plan
 from repro.serve import serve_step as ss
 from repro.train import optimizer as opt
 from repro.train import train_step as ts

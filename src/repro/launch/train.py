@@ -37,7 +37,6 @@ def main(argv=None) -> int:
             f"--xla_force_host_platform_device_count={args.devices}"
         )
 
-    import jax
 
     from repro.configs import get_config
     from repro.launch.mesh import make_mesh, mesh_context

@@ -21,12 +21,10 @@ EXPERIMENTS.md §Perf):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat

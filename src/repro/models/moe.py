@@ -14,7 +14,6 @@ replicate over tp and the per-expert FFN shards its hidden dim
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

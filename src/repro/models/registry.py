@@ -13,13 +13,12 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import encdec, mamba, moe, rglru, transformer as T
-from repro.models.shardings import MeshAxes, ServePlan
 
 
 @dataclass(frozen=True)

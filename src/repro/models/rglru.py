@@ -128,8 +128,6 @@ def rglru_step(x1, p, cfg: ArchConfig, h):
 def init_rec_block(rng, cfg: ArchConfig, dtype=jnp.bfloat16):
     d, w = cfg.d_model, cfg.lru_width
     ks = jax.random.split(rng, 5)
-    sd = 1.0 / math.sqrt(d)
-    sw = 1.0 / math.sqrt(w)
     return {
         "lin_x": L.init_dense(ks[0], d, w, False, dtype),
         "lin_y": L.init_dense(ks[1], d, w, False, dtype),

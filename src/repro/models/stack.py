@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 
 def stacked_init(init_fn: Callable, rng: jax.Array, num: int):

@@ -13,7 +13,6 @@ scanned (stack.py). Three entry points per model:
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

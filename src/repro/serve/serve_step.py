@@ -5,15 +5,12 @@ the serving example.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.data.pipeline import shapes_for_cell
 from repro.models.registry import ModelApi
 from repro.models.shardings import MeshAxes, ServePlan
 

@@ -2,6 +2,8 @@ from repro.storage.blockstore import BlockKey, BlockStore, PlacementError
 from repro.storage.netmodel import (
     BACKGROUND,
     FOREGROUND,
+    FOREGROUND_TENANT,
+    REPAIR_TENANT,
     ClusterProfile,
     NetSimulator,
     Transfer,
@@ -14,6 +16,8 @@ __all__ = [
     "PlacementError",
     "BACKGROUND",
     "FOREGROUND",
+    "FOREGROUND_TENANT",
+    "REPAIR_TENANT",
     "ClusterProfile",
     "NetSimulator",
     "Transfer",

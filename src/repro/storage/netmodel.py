@@ -14,22 +14,37 @@ container has no real cluster fabric.
 Fabric sharing comes in two modes:
 
   * ``fifo``    — a transfer occupies both ports contiguously from the
-    moment they free up; background transfers simply run at
-    ``background_share`` of the link rate. A long repair transfer
+    moment they free up; throttled tenants simply run at their weight
+    fraction of the link rate. A long repair transfer
     head-of-line-blocks any later foreground read on the same ports.
   * ``quantum`` — (default) transfers are scheduled in fixed-size
-    *quanta*: each quantum transmits at full link rate, and background
-    quanta are spaced so the class consumes only ``background_share`` of
-    the link in steady state (weighted-fair sharing; ``background_share``
-    is the quantum *ratio*, not a rate cap). The idle gaps between a
-    background transfer's quanta are real holes in the port timeline, so
-    a foreground read arriving mid-way through a multi-second repair
+    *quanta*: each quantum transmits at full link rate, and a weight-w
+    tenant's quanta are spaced so the tenant consumes only w of the
+    link in steady state (weighted-fair sharing; the weight is the
+    quantum *ratio*, not a rate cap). The idle gaps between a throttled
+    tenant's quanta are real holes in the port timeline, so a
+    full-weight read arriving mid-way through a multi-second repair
     transfer slots into the next hole instead of waiting for the whole
     thing — preemption at quantum granularity, the way production
     traffic shapers (DRR/WFQ schedulers) bound repair interference.
 
+Multi-tenancy: sharing is governed by ``tenant_weights``, a map from an
+arbitrary hashable tenant id to a weight in (0, 1]. Each (port, tenant)
+pair keeps its own eligibility cursor, so any number of tenants share a
+link in proportion to their weights. The original two-class interface is
+a compatibility shim over this: ``background_share`` seeds the weight of
+the ``"repair"`` tenant (and the legacy ``BACKGROUND`` int id), while
+``FOREGROUND``/``"foreground"`` stay at weight 1.0. A ``Transfer`` names
+its tenant either via ``tenant`` or via the legacy ``priority`` field.
+
+Accounting: per-tenant bytes/busy/makespan (``class_bytes`` et al., keyed
+by tenant id), per-tenant starvation (worst and total queueing delay
+before a transfer's first quantum — ``tenant_wait_max``), and optional
+per-transfer deadlines (``Transfer.deadline``; misses counted per tenant
+in ``tenant_deadline_missed``).
+
 Both modes conserve bytes exactly and an uncontended transfer finishes at
-(essentially) the same time either way; they differ only in how classes
+(essentially) the same time either way; they differ only in how tenants
 interleave under contention.
 """
 
@@ -58,13 +73,19 @@ class ClusterProfile:
         return cls(name="computation-critical", node_bandwidth=250e6, compute_scale=8.0)
 
 
-# Priority classes for fabric sharing. Foreground (client reads) always
-# runs at full link speed; background (repair/rebalance) may be throttled
-# to a fraction of the link so client traffic keeps headroom — the knob
-# every production repair pipeline exposes (HDFS-RAID's RaidNode caps,
-# Ceph's osd_recovery_max_active etc.).
+# Legacy priority classes for fabric sharing. Foreground (client reads)
+# always runs at full link speed; background (repair/rebalance) may be
+# throttled to a fraction of the link so client traffic keeps headroom —
+# the knob every production repair pipeline exposes (HDFS-RAID's RaidNode
+# caps, Ceph's osd_recovery_max_active etc.). These remain valid tenant
+# ids; named tenants generalize them.
 FOREGROUND = 0
 BACKGROUND = 1
+
+# Canonical tenant names used by the gateway dataplane. Any hashable id
+# works; these two inherit default weights from ``background_share``.
+FOREGROUND_TENANT = "foreground"
+REPAIR_TENANT = "repair"
 
 
 @dataclass
@@ -74,6 +95,17 @@ class Transfer:
     nbytes: int
     not_before: float = 0.0  # dependency: source block exists at this time
     priority: int = FOREGROUND
+    # Tenant id for weighted-fair sharing; None falls back to the legacy
+    # ``priority`` field so two-class callers keep working unchanged.
+    tenant: object = None
+    # Optional completion deadline (absolute simulated seconds); the
+    # simulator never drops a late transfer, it counts the miss per
+    # tenant so SLO layers above can act on it.
+    deadline: float | None = None
+
+    @property
+    def effective_tenant(self) -> object:
+        return self.priority if self.tenant is None else self.tenant
 
 
 class _PortTimeline:
@@ -96,12 +128,19 @@ class _PortTimeline:
         A nanosecond of tolerance keeps exact-fit holes usable — the
         weighted-fair spacing leaves holes of exactly one quantum, which
         strict float comparison would reject by one ulp."""
+        return self.next_gap(t, dur)[0]
+
+    def next_gap(self, t: float, min_dur: float) -> tuple[float, float]:
+        """Earliest (s, length) with s >= t, [s, s + min_dur) free, and
+        ``length`` the full free run from s (inf on the open tail) —
+        lets the scheduler shrink a quantum into a sub-quantum hole
+        instead of skipping it."""
         i = bisect.bisect_right(self.ends, t)
         for j in range(i, len(self.starts)):
-            if self.starts[j] - t >= dur - 1e-9:
-                return t
+            if self.starts[j] - t >= min_dur - 1e-9:
+                return t, self.starts[j] - t
             t = max(t, self.ends[j])
-        return t
+        return t, float("inf")
 
     def occupy(self, start: float, end: float) -> None:
         i = bisect.bisect_left(self.starts, start)
@@ -123,37 +162,51 @@ class _PortTimeline:
 
 @dataclass
 class NetSimulator:
-    """Event-ordered per-node bandwidth simulator with priority classes.
+    """Event-ordered per-node bandwidth simulator with weighted-fair tenants.
 
     Each node has unit-bandwidth send and receive ports; a transfer
-    occupies both, starting no earlier than its dependency time.
-    Foreground and background transfers share the SAME port timelines —
-    repair traffic and client reads contend on one fabric instead of
-    running in separate universes. How they interleave is governed by
-    ``mode`` (see the module docstring): ``quantum`` (default) schedules
-    fixed-size full-rate quanta with weighted-fair spacing so foreground
-    traffic preempts long background transfers at quantum boundaries;
-    ``fifo`` reproduces the PR-1 hold-the-port-until-done model with
-    background throttled to ``background_share`` of the rate.
+    occupies both, starting no earlier than its dependency time. All
+    tenants share the SAME port timelines — repair traffic and client
+    reads contend on one fabric instead of running in separate
+    universes. How they interleave is governed by ``mode`` (see the
+    module docstring): ``quantum`` (default) schedules fixed-size
+    full-rate quanta with per-(port, tenant) weighted-fair cursors so
+    full-weight traffic preempts long throttled transfers at quantum
+    boundaries; ``fifo`` reproduces the PR-1 hold-the-port-until-done
+    model with throttled tenants rate-capped at their weight.
 
-    Per-class byte/busy accounting feeds the gateway's interference
-    metrics (how much repair slows reads and vice versa).
+    ``tenant_weights`` maps tenant id -> weight in (0, 1]; tenants not in
+    the map run at weight 1.0. ``background_share`` is the two-class
+    compatibility shim: it seeds the weight of the ``"repair"`` tenant
+    and the legacy ``BACKGROUND`` int id (explicit ``tenant_weights``
+    entries win).
+
+    Per-tenant byte/busy/makespan accounting feeds the gateway's
+    interference metrics; per-tenant starvation (queueing delay before a
+    transfer's first quantum) and deadline-miss counters feed its SLO
+    admission controller.
     """
 
     profile: ClusterProfile
     background_share: float = 1.0  # quantum ratio (fifo: rate fraction)
     mode: str = QUANTUM
     quantum_bytes: int = 65536  # quantum-mode scheduling granule
+    tenant_weights: dict | None = None  # tenant id -> weight in (0, 1]
     send_free: dict[int, float] = field(default_factory=dict)
     recv_free: dict[int, float] = field(default_factory=dict)
     total_bytes: int = 0
     makespan: float = 0.0
-    class_bytes: dict[int, int] = field(default_factory=dict)
-    class_busy: dict[int, float] = field(default_factory=dict)
-    class_makespan: dict[int, float] = field(default_factory=dict)
+    class_bytes: dict = field(default_factory=dict)  # tenant -> bytes
+    class_busy: dict = field(default_factory=dict)  # tenant -> busy secs
+    class_makespan: dict = field(default_factory=dict)  # tenant -> max end
+    tenant_wait_max: dict = field(default_factory=dict)  # worst queue delay
+    tenant_wait_sum: dict = field(default_factory=dict)
+    tenant_transfers: dict = field(default_factory=dict)
+    tenant_deadline_missed: dict = field(default_factory=dict)
+    tenant_deadline_met: dict = field(default_factory=dict)
 
     def __post_init__(self):
-        # share 0 would mean "repair paused" — this event model cannot
+        # weight 0 would mean "tenant paused" — this event model cannot
         # express it (every scheduled transfer must complete)
         if not 0.0 < self.background_share <= 1.0:
             raise ValueError(
@@ -163,38 +216,109 @@ class NetSimulator:
             raise ValueError(f"mode must be 'fifo' or 'quantum', got {self.mode!r}")
         if self.quantum_bytes <= 0:
             raise ValueError(f"quantum_bytes must be positive, got {self.quantum_bytes}")
+        # compat shim: the two legacy classes are just two pre-seeded
+        # tenants — background_share becomes the "repair" weight
+        weights = {
+            FOREGROUND: 1.0,
+            FOREGROUND_TENANT: 1.0,
+            BACKGROUND: self.background_share,
+            REPAIR_TENANT: self.background_share,
+        }
+        if self.tenant_weights:
+            for tenant, w in self.tenant_weights.items():
+                if not 0.0 < w <= 1.0:
+                    raise ValueError(
+                        f"tenant weight must be in (0, 1], got {tenant!r}: {w}"
+                    )
+                weights[tenant] = w
+        self._weights = weights
         self._send: dict[int, _PortTimeline] = {}
         self._recv: dict[int, _PortTimeline] = {}
-        # per-(direction, node, class) eligibility cursor: a share-s class
-        # may claim its next quantum on a port no earlier than
-        # (previous quantum start + dur/s), so the ratio holds across a
+        # per-(direction, node, tenant) eligibility cursor: a weight-w
+        # tenant may claim its next quantum on a port no earlier than
+        # (previous quantum start + dur/w), so the ratio holds across a
         # STREAM of small transfers too, not just within one big one
-        self._class_cursor: dict[tuple[str, int, int], float] = {}
-        # set once any share<1 transfer is scheduled; until then the
-        # timelines are hole-free and share-1.0 transfers can take the
+        self._class_cursor: dict[tuple, float] = {}
+        # latest end of any FULL-weight quantum per send port: weight-1.0
+        # reservations are not preemptible by anyone, so they bound every
+        # tenant's admission-time backlog estimate (send_backlog)
+        self._fw_send_end: dict[int, float] = {}
+        # smallest usable hole: an eighth of a quantum bounds the chunk
+        # count per transfer while letting fragmented timelines (tenants
+        # with incommensurate periods) stay work-conserving
+        self._granule = max(1, self.quantum_bytes // 8)
+        # set once any weight<1 transfer is scheduled; until then the
+        # timelines are hole-free and weight-1.0 transfers can take the
         # O(1) contiguous fast path (schedule-identical to chunking)
         self._seen_throttled = False
 
+    def weight_of(self, tenant) -> float:
+        """Fair-share weight of a tenant. Unregistered NAMED tenants run
+        at full weight; unregistered int ids keep the legacy two-class
+        contract (any priority other than FOREGROUND was throttled to
+        ``background_share``), so pre-tenant callers using custom class
+        ids keep their throttle."""
+        w = self._weights.get(tenant)
+        if w is not None:
+            return w
+        if isinstance(tenant, int):
+            return self.background_share
+        return 1.0
+
     def transfer(self, t: Transfer) -> float:
         """Schedule a transfer; returns its completion time (seconds)."""
+        tenant = t.effective_tenant
         if self.mode == QUANTUM:
-            end, busy = self._transfer_quantum(t)
+            end, busy, first_start = self._transfer_quantum(t, tenant)
         else:
-            end, busy = self._transfer_fifo(t)
+            end, busy, first_start = self._transfer_fifo(t, tenant)
         self.total_bytes += t.nbytes
         self.makespan = max(self.makespan, end)
-        self.class_bytes[t.priority] = self.class_bytes.get(t.priority, 0) + t.nbytes
-        self.class_busy[t.priority] = self.class_busy.get(t.priority, 0.0) + busy
-        self.class_makespan[t.priority] = max(
-            self.class_makespan.get(t.priority, 0.0), end
+        self.class_bytes[tenant] = self.class_bytes.get(tenant, 0) + t.nbytes
+        self.class_busy[tenant] = self.class_busy.get(tenant, 0.0) + busy
+        self.class_makespan[tenant] = max(
+            self.class_makespan.get(tenant, 0.0), end
         )
+        # starvation accounting: how long the transfer queued before its
+        # first byte moved (beyond its own dependency time)
+        wait = max(0.0, first_start - t.not_before)
+        self.tenant_wait_max[tenant] = max(
+            self.tenant_wait_max.get(tenant, 0.0), wait
+        )
+        self.tenant_wait_sum[tenant] = self.tenant_wait_sum.get(tenant, 0.0) + wait
+        self.tenant_transfers[tenant] = self.tenant_transfers.get(tenant, 0) + 1
+        if t.deadline is not None:
+            key = (
+                "tenant_deadline_missed" if end > t.deadline else "tenant_deadline_met"
+            )
+            counter = getattr(self, key)
+            counter[tenant] = counter.get(tenant, 0) + 1
         return end
 
+    def send_backlog(self, node: int, tenant, now: float) -> float:
+        """How far beyond ``now`` this tenant's next quantum on the
+        node's send port is already committed — the admission-estimator
+        view of fabric queueing. Quantum mode takes the max of the
+        tenant's own fair-share cursor and the port's full-weight
+        horizon (weight-1.0 reservations preempt nobody and are
+        preemptible by nobody, so they delay every tenant; throttled
+        tenants' reservations leave preemptible holes and only count
+        against their own cursor). Fifo mode reads the port's
+        hold-until-done horizon."""
+        if self.mode == QUANTUM:
+            cursor = self._class_cursor.get(("s", node, tenant), 0.0)
+            fw = self._fw_send_end.get(node, 0.0)
+            return max(0.0, max(cursor, fw) - now)
+        return max(0.0, self.send_free.get(node, 0.0) - now)
+
+    def deadline_miss_rate(self, tenant) -> float:
+        missed = self.tenant_deadline_missed.get(tenant, 0)
+        met = self.tenant_deadline_met.get(tenant, 0)
+        return missed / (missed + met) if (missed + met) else 0.0
+
     # -- fifo: the PR-1 hold-until-done model ---------------------------------
-    def _transfer_fifo(self, t: Transfer) -> tuple[float, float]:
-        bw = self.profile.node_bandwidth
-        if t.priority != FOREGROUND:
-            bw *= self.background_share
+    def _transfer_fifo(self, t: Transfer, tenant) -> tuple[float, float, float]:
+        bw = self.profile.node_bandwidth * self.weight_of(tenant)
         start = max(
             t.not_before,
             self.send_free.get(t.src_node, 0.0),
@@ -204,23 +328,25 @@ class NetSimulator:
         end = start + dur
         self.send_free[t.src_node] = end
         self.recv_free[t.dst_node] = end
-        return end, dur
+        return end, dur, start
 
     # -- quantum: weighted-fair preemptive sharing ----------------------------
-    def _transfer_quantum(self, t: Transfer) -> tuple[float, float]:
+    def _transfer_quantum(self, t: Transfer, tenant) -> tuple[float, float, float]:
         bw = self.profile.node_bandwidth
-        share = 1.0 if t.priority == FOREGROUND else self.background_share
+        share = self.weight_of(tenant)
         src = self._send.setdefault(t.src_node, _PortTimeline())
         dst = self._recv.setdefault(t.dst_node, _PortTimeline())
-        ck_s = ("s", t.src_node, t.priority)
-        ck_r = ("r", t.dst_node, t.priority)
+        ck_s = ("s", t.src_node, tenant)
+        ck_r = ("r", t.dst_node, tenant)
         cursors = self._class_cursor
         if share < 1.0:
             self._seen_throttled = True
-        remaining = t.nbytes
+        remaining = float(t.nbytes)
         end = t.not_before
+        first_start = t.not_before
         busy = 0.0
-        # Full-share fast path while no throttled class has ever run:
+        first = True
+        # Full-share fast path while no throttled tenant has ever run:
         # the timelines are hole-free, so chunking into quanta would
         # produce one contiguous reservation anyway — schedule the whole
         # transfer in one step instead of nbytes/quantum_bytes of them.
@@ -231,39 +357,65 @@ class NetSimulator:
             if share == 1.0 and not self._seen_throttled
             else self.quantum_bytes
         )
-        while remaining > 0:
-            chunk = min(remaining, chunk_cap)
-            remaining -= chunk
-            dur = chunk / bw
-            # each quantum transmits at FULL rate; weighted-fair spacing
-            # makes the class's next quantum on these ports eligible only
-            # dur/share later, so a share-s class consumes at most s of
-            # the link in steady state while the (1-s) holes it leaves
-            # are real gaps other classes preempt into.
+        # Exit threshold in the same units as next_gap's acceptance
+        # tolerance (1e-9 s, converted to bytes): a residual below it
+        # would make min_dur sub-tolerance, where next_gap can accept
+        # zero-length gaps and the loop would stop making progress.
+        while remaining > bw * 1e-9:
+            want_dur = min(remaining, chunk_cap) / bw
+            # Sub-quantum holes are usable down to the granule: two
+            # tenants with incommensurate periods fragment the timeline
+            # into holes smaller than a full quantum, and a scheduler
+            # that can only place whole quanta would starve a light
+            # tenant out of exactly the fragments its weight entitles it
+            # to (non-work-conserving). Shrinking the chunk to the hole
+            # keeps delivered bytes proportional to the weights.
+            min_dur = min(remaining, self._granule) / bw
+            # each chunk transmits at FULL rate; weighted-fair spacing
+            # makes the tenant's next chunk on these ports eligible only
+            # dur/share later, so a weight-w tenant consumes at most w of
+            # the link in steady state while the (1-w) holes it leaves
+            # are real gaps other tenants preempt into.
             earliest = max(
                 t.not_before, cursors.get(ck_s, 0.0), cursors.get(ck_r, 0.0)
             )
-            start = self._find_slot(src, dst, earliest, dur)
+            start, avail = self._find_gap(src, dst, earliest, min_dur)
+            dur = min(want_dur, avail)
+            remaining -= dur * bw
             src.occupy(start, start + dur)
             dst.occupy(start, start + dur)
+            if first:
+                first_start = start
+                first = False
             end = start + dur
             busy += dur
-            eligible = start + dur / share
-            cursors[ck_s] = eligible
-            cursors[ck_r] = eligible
+            # Virtual-clock eligibility: advance each cursor from its
+            # PREVIOUS value, not from the actual (possibly collision-
+            # delayed) start — a tenant knocked off its token schedule by
+            # another's quantum may claim its next one on time instead of
+            # compounding the delay (rate-drift-free weighted fairness).
+            # Re-anchoring at the chunk's end bounds the catch-up
+            # credit: a long-idle or long-blocked tenant cannot burst
+            # past back-to-back quanta.
+            for ck in (ck_s, ck_r):
+                cursors[ck] = max(cursors.get(ck, 0.0) + dur / share, end)
         # keep the scalar summaries coherent for introspection/debugging
         self.send_free[t.src_node] = max(self.send_free.get(t.src_node, 0.0), end)
         self.recv_free[t.dst_node] = max(self.recv_free.get(t.dst_node, 0.0), end)
-        return end, busy
+        if share == 1.0:
+            self._fw_send_end[t.src_node] = max(
+                self._fw_send_end.get(t.src_node, 0.0), end
+            )
+        return end, busy, first_start
 
     @staticmethod
-    def _find_slot(
-        src: _PortTimeline, dst: _PortTimeline, t: float, dur: float
-    ) -> float:
-        """Earliest start >= t with a dur-sized hole on BOTH ports."""
+    def _find_gap(
+        src: _PortTimeline, dst: _PortTimeline, t: float, min_dur: float
+    ) -> tuple[float, float]:
+        """Earliest (start, length) of a >= min_dur hole on BOTH ports."""
         while True:
-            t1 = src.next_fit(t, dur)
-            t2 = dst.next_fit(t1, dur)
+            t1, g1 = src.next_gap(t, min_dur)
+            t2, g2 = dst.next_gap(t1, min_dur)
             if t2 == t1:
-                return t1
+                return t1, min(g1, g2)
             t = t2

@@ -23,7 +23,7 @@ math and scaled by the cluster profile.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 import jax
@@ -34,7 +34,7 @@ from repro.coding import gf256
 from repro.core.failure_matrix import independent_clusters
 from repro.core.product_code import CoreCode, CoreCodec
 from repro.core.recoverability import is_recoverable
-from repro.core.scheduling import SCHEDULERS, RepairStep, Schedule
+from repro.core.scheduling import SCHEDULERS, RepairStep
 from repro.storage.blockstore import BlockStore
 from repro.storage.netmodel import ClusterProfile, NetSimulator, Transfer
 
@@ -67,12 +67,13 @@ class BlockFixer:
     mode: str = "core"  # hdfs_raid | hdfs_raid_opt | core
     scheduler: str = "rgs"  # row_first | column_first | rgs
     # Optional shared fabric: when ``sim`` is set, repair transfers are
-    # scheduled on that simulator (at ``priority``) instead of a private
-    # one, so they contend with whatever else rides the fabric — the
-    # gateway runs repair as BACKGROUND here while client reads go
-    # FOREGROUND on the same NetSimulator.
+    # scheduled on that simulator (at ``priority`` — any tenant id the
+    # simulator's tenant_weights knows) instead of a private one, so they
+    # contend with whatever else rides the fabric — the gateway runs
+    # repair as the "repair" tenant here while client reads ride their
+    # own tenants on the same NetSimulator.
     sim: NetSimulator | None = None
-    priority: int = 0
+    priority: object = 0
     not_before: float = 0.0  # earliest start (failure-detection time)
     # Invoked with each BlockKey this fixer writes back, right after the
     # store write. The gateway uses it to re-price / refresh cache

@@ -21,8 +21,8 @@ from repro.checkpoint.core_ckpt import CoreCheckpointer
 from repro.configs.base import ArchConfig
 from repro.core.product_code import CoreCode
 from repro.data.pipeline import SyntheticPipeline, batch_specs
-from repro.models.registry import ModelApi, get_model
-from repro.models.shardings import SINGLE, MeshAxes, axes_for_mesh
+from repro.models.registry import get_model
+from repro.models.shardings import SINGLE, axes_for_mesh
 from repro.storage.blockstore import BlockStore
 from repro.train import optimizer as opt
 from repro.train import train_step as ts

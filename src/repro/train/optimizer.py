@@ -10,11 +10,9 @@ param PartitionSpecs through ``opt_specs``), so FSDP shards moments too
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

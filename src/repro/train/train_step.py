@@ -9,7 +9,6 @@ launch/dryrun.py) from the model's param specs.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable
 

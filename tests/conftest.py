@@ -1,10 +1,13 @@
 """Shared pytest configuration.
 
-``hypothesis`` is an optional test dependency (no network in some
-environments, so it cannot always be installed). Modules that use it are
-skipped at collection time instead of erroring the whole collection run.
-The scan is content-based so new hypothesis-using test modules are
-covered automatically.
+Optional-dependency guard: some test extras cannot always be installed
+(no network in some environments), so modules that use them are skipped
+at collection time instead of erroring the whole run. The scan is
+content-based, keyed on the table below, so new test modules using an
+optional dependency are covered automatically. The same guard style
+protects the CI benchmark smoke: benchmarks/run.py applies it for the
+accelerator backend (falling back to the Pallas interpreter sweep when
+no TPU/GPU is attached) rather than for Python packages.
 """
 
 from __future__ import annotations
@@ -12,11 +15,18 @@ from __future__ import annotations
 import importlib.util
 import pathlib
 
+# package name -> import markers that identify a module using it
+OPTIONAL_DEPS = {
+    "hypothesis": ("import hypothesis", "from hypothesis"),
+}
+
 collect_ignore: list[str] = []
 
-if importlib.util.find_spec("hypothesis") is None:
-    _here = pathlib.Path(__file__).parent
+_here = pathlib.Path(__file__).parent
+for _pkg, _markers in OPTIONAL_DEPS.items():
+    if importlib.util.find_spec(_pkg) is not None:
+        continue
     for _path in sorted(_here.glob("test_*.py")):
         text = _path.read_text(encoding="utf-8", errors="ignore")
-        if "import hypothesis" in text or "from hypothesis" in text:
+        if any(m in text for m in _markers):
             collect_ignore.append(_path.name)

@@ -1,0 +1,101 @@
+"""Schema guard for BENCH_gateway.json — the machine-readable perf
+snapshot benchmarks/run.py --fast rewrites on every run.
+
+The ROADMAP's standing rule is that these keys are STABLE: extended,
+never renamed, so the perf trajectory stays comparable across PRs. This
+test pins the key set from PR 2 (throughput / latency / amplification /
+pipelined-vs-serial / p99-under-repair) plus the PR 3 multi-tenant block
+(gateway_tenants), and skips cleanly when the snapshot has not been
+generated in this checkout (e.g. a fresh clone running only the unit
+suite).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import pytest
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_gateway.json"
+
+# PR-2 top-level keys + the PR-3 gateway_tenants block. New keys may be
+# ADDED next to these; removing or renaming any of them is a break.
+TOP_LEVEL_KEYS = {
+    "schema",
+    "bench",
+    "throughput_rps",
+    "p50_ms",
+    "p99_ms",
+    "degraded_read_amplification",
+    "pipelined_vs_serial",
+    "p99_under_repair_ms",
+    "jit_cache_entries",
+    "autotune",
+    "gateway_tenants",
+}
+
+PIPELINE_KEYS = {
+    "serial_rps",
+    "pipelined_rps",
+    "speedup",
+    "serial_p99_ms",
+    "pipelined_p99_ms",
+}
+
+REPAIR_KEYS = {"fifo", "quantum", "improvement"}
+
+TENANT_KEYS = {
+    "tenant_weights",
+    "tenant_p99_ms",
+    "tenant_wait_max_ms",
+    "slo_violation_rate",
+    "slo_rejected",
+    "engines_speedup",
+}
+
+TIER_NAMES = {"gold", "silver", "bronze"}
+
+
+@pytest.fixture(scope="module")
+def bench() -> dict:
+    if not BENCH_PATH.exists():
+        pytest.skip(f"{BENCH_PATH.name} not generated in this checkout")
+    with open(BENCH_PATH) as f:
+        return json.load(f)
+
+
+def test_top_level_keys_stable(bench):
+    missing = TOP_LEVEL_KEYS - set(bench)
+    assert not missing, f"BENCH_gateway.json lost stable keys: {sorted(missing)}"
+    assert bench["bench"] == "gateway"
+    assert bench["schema"] == 1
+
+
+def test_load_and_pipeline_keys(bench):
+    for section in ("throughput_rps", "p50_ms", "p99_ms"):
+        assert {"f0", "f1", "f2"} <= set(bench[section]), section
+    assert {"f1", "f2"} <= set(bench["degraded_read_amplification"])
+    assert PIPELINE_KEYS <= set(bench["pipelined_vs_serial"])
+    assert REPAIR_KEYS <= set(bench["p99_under_repair_ms"])
+
+
+def test_gateway_tenants_keys(bench):
+    ten = bench["gateway_tenants"]
+    missing = TENANT_KEYS - set(ten)
+    assert not missing, f"gateway_tenants lost stable keys: {sorted(missing)}"
+    for section in ("tenant_weights", "tenant_p99_ms", "tenant_wait_max_ms"):
+        assert TIER_NAMES <= set(ten[section]), section
+    assert {"off", "reject"} <= set(ten["slo_violation_rate"])
+    assert {"rps_1", "rps_4", "speedup"} <= set(ten["engines_speedup"])
+
+
+def test_gateway_tenants_values_sane(bench):
+    """Light sanity on the recorded values (the real acceptance gates
+    live in benchmarks/gateway_load.py check()): weights map to the tier
+    scheme and the recorded numbers are positive."""
+    ten = bench["gateway_tenants"]
+    assert ten["tenant_weights"] == {"gold": 1.0, "silver": 0.5, "bronze": 0.2}
+    assert all(v > 0 for v in ten["tenant_p99_ms"].values())
+    assert ten["engines_speedup"]["rps_1"] > 0
+    assert ten["engines_speedup"]["rps_4"] > 0

@@ -8,14 +8,13 @@ the original data. This is the system-level invariant of the paper:
 from __future__ import annotations
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.product_code import CoreCode, CoreCodec
 from repro.core.recoverability import is_recoverable
 from repro.storage.blockstore import BlockStore
 from repro.storage.netmodel import ClusterProfile
-from repro.storage.repair import BlockFixer, UnrecoverableError
+from repro.storage.repair import BlockFixer
 
 CODES = [(9, 6, 3), (14, 12, 5), (6, 4, 2), (8, 6, 4)]
 
@@ -74,7 +73,6 @@ def test_random_pattern_repair_roundtrip(code_i, p, seed, mode, scheduler):
 def test_checkpoint_roundtrip_random_trees(seed, n_leaves, kill):
     """Random mixed-dtype pytrees survive CORE save -> node kills ->
     degraded restore bit-exactly."""
-    import jax.numpy as jnp
 
     from repro.checkpoint.core_ckpt import CoreCheckpointer
 

@@ -132,9 +132,8 @@ def test_recoverable_pattern_at_upper_bound():
 def test_recoverability_vs_exhaustive_rank_check():
     """Cross-validate the recursive checker against exact linear-algebra
     decodability of the full product code on a small code."""
-    from repro.coding.linear import LinearCode, rank_gf256
+    from repro.coding.linear import LinearCode
     from repro.coding import rs as rs_mod
-    import itertools
 
     code = CoreCode(n=5, k=3, t=2)
     # full product-code generator: (t+1)*n rows, t*k message symbols

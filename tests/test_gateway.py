@@ -12,15 +12,20 @@ from repro.gateway import (
     GatewayConfig,
     LRUBlockCache,
     ObjectGateway,
+    TenantProfile,
     UnreadableObjectError,
     WorkloadConfig,
     generate_requests,
+    generate_tenant_requests,
     plan_failures,
+    tenant_slo_map,
+    tenant_weight_map,
 )
 from repro.gateway.workload import FailureEvent, Request, zipf_probs
 from repro.storage.blockstore import BlockStore
 from repro.storage.netmodel import (
     BACKGROUND,
+    REPAIR_TENANT,
     ClusterProfile,
     NetSimulator,
     Transfer,
@@ -411,7 +416,8 @@ def test_gateway_background_repair_restores_health():
     report = gw.serve(reqs, [FailureEvent(time=0.02, node=victim)])
     assert report.repair_reports, "repair must have run"
     assert all(r.recovered for r in report.repair_reports)
-    assert gw.sim.class_bytes.get(BACKGROUND, 0) > 0  # shared-fabric repair
+    # shared-fabric repair, accounted under the "repair" tenant
+    assert gw.sim.class_bytes.get(REPAIR_TENANT, 0) > 0
     # after repair, the failure set no longer degrades the store
     for gid in gw._groups:
         fm = gw.store.failure_matrix(gid, code.rows, code.n)
@@ -533,6 +539,149 @@ def test_jit_cache_entries_bounded_over_500_requests():
     st = gw.coalescer.stats
     assert st.decode_calls > len(PAD_LADDER)  # plenty of traffic...
     assert 0 < report.jit_cache_entries <= len(PAD_LADDER)  # ...few traces
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant QoS: tenant workloads, SLO admission, multi-engine decode
+# ---------------------------------------------------------------------------
+
+def test_tenant_requests_merged_sorted_and_tagged():
+    profs = [
+        TenantProfile("gold", arrival_rate=500.0, weight=1.0, slo_p99=0.1),
+        TenantProfile("bronze", arrival_rate=250.0, weight=0.25),
+    ]
+    reqs = generate_tenant_requests(profs, num_objects=12,
+                                    num_requests_per_tenant=100, seed=4)
+    assert len(reqs) == 200
+    assert all(a.time <= b.time for a, b in zip(reqs, reqs[1:]))
+    by_tenant = {t: [r for r in reqs if r.tenant == t] for t in ("gold", "bronze")}
+    assert len(by_tenant["gold"]) == len(by_tenant["bronze"]) == 100
+    # reproducible
+    again = generate_tenant_requests(profs, 12, 100, seed=4)
+    assert reqs == again
+    assert tenant_weight_map(profs) == {"gold": 1.0, "bronze": 0.25}
+    assert tenant_slo_map(profs) == {"gold": 0.1}  # best-effort has no SLO
+
+
+def test_planner_candidates_table1_cheapest_first():
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=60)
+    make_group(code, store, q=512)
+    planner = DegradedReadPlanner(store, code)
+    # healthy: single all-direct candidate
+    (only,) = planner.candidates("g0", 0)
+    assert not only.degraded
+    # one missing data block, column intact: vertical (t=3) beats
+    # horizontal (k=6); both viable
+    store.fail_nodes([store.node_of(("g0", 0, 0))])
+    cands = planner.candidates("g0", 0)
+    assert len(cands) == 2
+    assert cands[0].decodes[0].kind == "V"
+    assert cands[1].decodes[0].kind == "H"
+    assert cands[0].reconstruction_blocks <= cands[1].reconstruction_blocks
+    assert planner.plan("g0", 0) == cands[0]
+
+
+def test_gateway_admission_reject_cuts_slo_violations():
+    """Decode-bound degraded load vs a tight SLO: with admission off most
+    GETs bust the target; with admission="reject" the controller sheds
+    load and the admitted survivors' violation rate drops; "degrade"
+    first re-ranks the planner's candidates by estimated time and only
+    rejects when even the cheapest plan busts the target."""
+    code = CoreCode(9, 6, 3)
+    slo = 0.05
+    rates = {}
+    for admission in ("off", "reject", "degrade"):
+        cfg_kw = dict(
+            batch_window=0.003,
+            admission=admission,
+            tenant_slo_p99={"foreground": slo},
+        )
+        gw = ObjectGateway(
+            code,
+            ClusterProfile.computation_critical(),
+            60,
+            GatewayConfig(**cfg_kw),
+        )
+        rng = np.random.default_rng(9)
+        gw.load_objects(
+            rng.integers(0, 256, (12, code.k, 1 << 16), dtype=np.uint8)
+        )
+        reqs = generate_requests(
+            WorkloadConfig(
+                num_objects=12, num_requests=250, arrival_rate=2000.0, seed=6
+            )
+        )
+        failures = plan_failures(6, 60, at_time=0.005, spacing=0.0, seed=6)
+        rep = gw.serve(reqs, failures)
+        rates[admission] = rep.slo_violation_rate("foreground", slo)
+        if admission == "off":
+            assert rep.rejections == {}
+            assert len(rep.completed) == 250
+            assert rates["off"] > 0.2  # the backlog really bites
+        else:
+            rejected = rep.rejections.get("foreground", 0)
+            assert rejected > 0
+            assert len(rep.completed) == 250 - rejected
+            recs = rep.rejected
+            assert len(recs) == rejected
+            assert all(r.latency is None and r.rejected for r in recs)
+            # every admitted GET is still verified against ground truth
+            # (degrade mode may swap plans, never payloads)
+            assert any(r.degraded for r in rep.completed)
+    assert rates["reject"] < rates["off"]
+    assert rates["degrade"] < rates["off"]
+
+
+def test_gateway_multi_engine_serves_identical_bytes():
+    """num_engines changes WHEN decodes run, never WHAT is served: the
+    4-engine run is byte-identical to the 1-engine run per request, with
+    identical degradation outcomes. (The engine pool's throughput win is
+    gated in benchmarks/gateway_load.py — latencies are built on
+    per-run measured kernel times, so cross-run latency comparisons
+    would be asserting on wall-clock noise.)"""
+    code = CoreCode(9, 6, 3)
+    reports = {}
+    for ne in (1, 4):
+        gw = ObjectGateway(
+            code,
+            ClusterProfile.computation_critical(),
+            60,
+            GatewayConfig(
+                batch_window=0.005, num_engines=ne, record_payloads=True
+            ),
+        )
+        rng = np.random.default_rng(9)
+        gw.load_objects(rng.integers(0, 256, (12, code.k, 2048), dtype=np.uint8))
+        reqs = generate_requests(
+            WorkloadConfig(
+                num_objects=12, num_requests=200, arrival_rate=3000.0, seed=8
+            )
+        )
+        failures = plan_failures(4, 60, at_time=0.005, spacing=0.0, seed=8)
+        reports[ne] = gw.serve(reqs, failures)
+    one, four = reports[1].records, reports[4].records
+    assert len(one) == len(four) == 200
+    for a, b in zip(one, four):
+        assert (a.time, a.object_id, a.kind, a.degraded) == (
+            b.time, b.object_id, b.kind, b.degraded,
+        )
+        assert a.payload_digest == b.payload_digest
+    assert any(r.degraded for r in one)
+
+
+def test_gateway_config_validation():
+    code = CoreCode(9, 6, 3)
+    profile = ClusterProfile.network_critical()
+    with pytest.raises(ValueError):
+        ObjectGateway(code, profile, 60, GatewayConfig(admission="maybe"))
+    with pytest.raises(ValueError):
+        ObjectGateway(code, profile, 60, GatewayConfig(num_engines=0))
+    with pytest.raises(ValueError):
+        # the serial baseline models a single-engine synchronous loop
+        ObjectGateway(
+            code, profile, 60, GatewayConfig(pipeline="serial", num_engines=4)
+        )
 
 
 def test_gateway_unrecoverable_object_reported_not_crashing():

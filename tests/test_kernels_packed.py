@@ -4,17 +4,16 @@ to the tile)."""
 
 from __future__ import annotations
 
+import importlib
+
+import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.coding import rs
-import importlib
-
-gfk = importlib.import_module("repro.kernels.gf256_matmul")
 from repro.kernels import ops, ref
 
-import jax.numpy as jnp
+gfk = importlib.import_module("repro.kernels.gf256_matmul")
 
 
 @settings(max_examples=12, deadline=None)

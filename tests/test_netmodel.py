@@ -13,6 +13,8 @@ import pytest
 from repro.storage.netmodel import (
     BACKGROUND,
     FOREGROUND,
+    FOREGROUND_TENANT,
+    REPAIR_TENANT,
     ClusterProfile,
     NetSimulator,
     Transfer,
@@ -117,6 +119,140 @@ def test_mode_and_quantum_validation():
         NetSimulator(PROFILE, quantum_bytes=0)
     with pytest.raises(ValueError):
         NetSimulator(PROFILE, background_share=0.0)
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant weighted-fair sharing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "weights",
+    [
+        {"a": 0.5, "b": 0.25, "c": 0.25},
+        {"a": 0.5, "b": 0.3, "c": 0.2},
+        {"a": 0.4, "b": 0.4, "c": 0.2},
+        {"a": 0.6, "b": 0.2, "c": 0.1},  # undersubscribed link
+    ],
+)
+def test_tenant_weights_deliver_proportional_bytes_when_saturated(weights):
+    """The fairness property: N tenants streaming concurrently on one
+    saturated port pair each see exactly their weighted-fair rate — a
+    weight-w tenant's stream of bytes completes at nbytes/(w * bw),
+    within one quantum of slack per transfer. Delivered bytes over any
+    saturated window therefore match ``tenant_weights`` to quantum
+    granularity. (Weights are guaranteed fractions, so the property
+    requires sum(weights) <= 1 — an oversubscribed link cannot honor
+    every tenant's self-clocked cap at once.)"""
+    sim = NetSimulator(PROFILE, mode="quantum", tenant_weights=weights)
+    quanta = 48
+    nbytes = quanta * sim.quantum_bytes
+    slack = sim.quantum_bytes / PROFILE.node_bandwidth
+    ends = {t: sim.transfer(Transfer(0, 1, nbytes, tenant=t)) for t in weights}
+    for t, w in weights.items():
+        expected = nbytes / (w * PROFILE.node_bandwidth)
+        # early side: the final quantum needs no trailing (1-w) gap, so a
+        # weight-w stream may finish up to (1/w - 1) quanta early; late
+        # side: a competing tenant may hold the final hole for a couple
+        # of quanta. Never later than that is the fairness guarantee.
+        assert ends[t] >= expected - slack / w - 1e-9, (t, w)
+        assert ends[t] <= expected + 2 * slack + 1e-9, (t, w)
+    # byte conservation across tenants
+    assert sim.total_bytes == len(weights) * nbytes
+    assert sim.class_bytes == {t: nbytes for t in weights}
+    # delivered *rate* orders with the weights
+    ordered = sorted(weights, key=weights.get, reverse=True)
+    rates = {t: nbytes / ends[t] for t in weights}
+    for hi, lo in zip(ordered, ordered[1:]):
+        assert rates[hi] >= rates[lo] - 1e-9
+
+
+def test_background_share_shim_reproduces_two_class_schedule():
+    """background_share is now just the seed weight of the "repair"
+    tenant: an explicit tenant_weights map with the same ratio must
+    reproduce the PR-2 two-class schedule transfer for transfer."""
+    schedule = [
+        (24 * MB, 0.0, "bg"),
+        (512 * 1024, 1.0, "fg"),
+        (3 * MB, 1.2, "bg"),
+        (2 * MB, 1.3, "fg"),
+    ]
+    legacy = NetSimulator(PROFILE, background_share=0.5, mode="quantum")
+    named = NetSimulator(
+        PROFILE,
+        mode="quantum",
+        tenant_weights={FOREGROUND_TENANT: 1.0, REPAIR_TENANT: 0.5},
+    )
+    for nbytes, t0, cls in schedule:
+        leg_end = legacy.transfer(
+            Transfer(
+                0, 1, nbytes, not_before=t0,
+                priority=BACKGROUND if cls == "bg" else FOREGROUND,
+            )
+        )
+        named_end = named.transfer(
+            Transfer(
+                0, 1, nbytes, not_before=t0,
+                tenant=REPAIR_TENANT if cls == "bg" else FOREGROUND_TENANT,
+            )
+        )
+        assert named_end == pytest.approx(leg_end, abs=1e-12)
+    assert legacy.total_bytes == named.total_bytes
+    # legacy accounting keys are the int classes, named keys the tenants
+    assert legacy.class_bytes[BACKGROUND] == named.class_bytes[REPAIR_TENANT]
+    assert legacy.class_bytes[FOREGROUND] == named.class_bytes[FOREGROUND_TENANT]
+
+
+def test_unknown_tenant_defaults_to_full_weight():
+    sim = NetSimulator(PROFILE, mode="quantum", tenant_weights={"slow": 0.25})
+    end = sim.transfer(Transfer(0, 1, MB, tenant="never-registered"))
+    assert end == pytest.approx(MB / PROFILE.node_bandwidth)
+    assert sim.weight_of("never-registered") == 1.0
+    assert sim.weight_of("slow") == 0.25
+
+
+def test_unregistered_int_priority_keeps_legacy_throttle():
+    """Pre-tenant callers could use any non-FOREGROUND int class id and
+    get background_share; that contract survives the tenant refactor."""
+    for mode in ("fifo", "quantum"):
+        sim = NetSimulator(PROFILE, background_share=0.5, mode=mode)
+        assert sim.weight_of(2) == 0.5  # custom legacy class id
+        assert sim.weight_of(FOREGROUND) == 1.0
+        end = sim.transfer(Transfer(0, 1, MB, priority=2))
+        assert end == pytest.approx(MB / (0.5 * PROFILE.node_bandwidth), rel=0.02)
+
+
+def test_invalid_tenant_weight_rejected():
+    with pytest.raises(ValueError):
+        NetSimulator(PROFILE, tenant_weights={"a": 0.0})
+    with pytest.raises(ValueError):
+        NetSimulator(PROFILE, tenant_weights={"a": 1.5})
+
+
+def test_starvation_accounting_tracks_queueing_delay():
+    """tenant_wait_max records how long a transfer queued before its
+    first byte — zero for an uncontended tenant, the blocking time for
+    one that waited behind another's reservation."""
+    sim = NetSimulator(PROFILE, mode="quantum")
+    sim.transfer(Transfer(0, 1, 12 * MB, tenant="a"))  # 1 s, holds port
+    end_b = sim.transfer(Transfer(0, 1, MB, tenant="b"))
+    assert sim.tenant_wait_max["a"] == pytest.approx(0.0)
+    # b queued the full second behind a's contiguous reservation
+    assert sim.tenant_wait_max["b"] == pytest.approx(1.0)
+    assert sim.tenant_transfers == {"a": 1, "b": 1}
+    assert end_b == pytest.approx(1.0 + MB / PROFILE.node_bandwidth)
+
+
+def test_deadline_accounting_counts_misses_per_tenant():
+    sim = NetSimulator(PROFILE, mode="quantum")
+    dur = MB / PROFILE.node_bandwidth
+    sim.transfer(Transfer(0, 1, MB, tenant="t", deadline=dur * 2))  # met
+    sim.transfer(Transfer(0, 1, MB, tenant="t", deadline=dur / 2))  # missed
+    sim.transfer(Transfer(0, 1, MB, tenant="t"))  # no deadline: uncounted
+    assert sim.tenant_deadline_met == {"t": 1}
+    assert sim.tenant_deadline_missed == {"t": 1}
+    assert sim.deadline_miss_rate("t") == pytest.approx(0.5)
+    assert sim.deadline_miss_rate("other") == 0.0
 
 
 def test_port_timeline_first_fit_and_merge():

@@ -8,7 +8,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.coding import gf256, lrc, rs
+from repro.coding import lrc, rs
 from repro.coding.linear import rank_gf256
 
 

@@ -5,13 +5,11 @@ tests)."""
 
 from __future__ import annotations
 
-import dataclasses
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

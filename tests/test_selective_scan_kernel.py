@@ -7,7 +7,6 @@ import importlib
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 ssk = importlib.import_module("repro.kernels.selective_scan")

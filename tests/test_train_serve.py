@@ -123,7 +123,6 @@ def test_slot_manager_continuous_batching():
     mgr = SlotManager(batch=2, cache_len=64)
     for rid in range(5):
         mgr.submit(Request(rid, np.arange(4, dtype=np.int32), max_new=3))
-    served = 0
     steps = 0
     while (mgr.live or mgr.waiting) and steps < 100:
         mgr.admit()

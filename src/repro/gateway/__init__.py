@@ -16,12 +16,30 @@
 # tenant's SLO are rejected up front (admission="reject") or first
 # degraded to the latency-cheapest viable plan (admission="degrade").
 # Decode runs on num_engines parallel simulated engine timelines with
-# least-loaded dispatch, so decode-bound degraded workloads scale with
-# the engine pool. Per-tenant latency, rejection, starvation, and
+# least-loaded dispatch under per-tenant engine shares (EnginePool:
+# full-weight tenants dispatch tenant-blind; a share-w tenant is
+# rate-capped at w of the pool's throughput), so decode-bound degraded
+# workloads scale with the engine pool while throttled tenants cannot
+# crowd it. Per-tenant latency, rejection, starvation, and
 # deadline-miss accounting surface in GatewayReport and NetSimulator.
+#
+# Fault scenarios + closed-loop repair (see repro.scenario for the
+# trace DSL): serve() consumes node-level cluster events mid-run —
+# FailureEvent (transient crash), NodeRecoverEvent (blocks return
+# intact; negative cache entries purged), CapacityLossEvent (blocks
+# destroyed; only repair restores them). Blocks on down nodes are
+# negative-cached with a TTL (GatewayConfig.negative_ttl) so planning
+# skips re-probing known failures; MTTR is sampled per healed block
+# (GatewayReport.mttr_samples / restored_samples) and
+# audit_durability() reports provable data loss. repair_pacing=True
+# closes the SLO loop: a PacingController (storage/repair.py) maps
+# observed foreground p99 headroom against tenant_slo_p99 — plus MTTR
+# urgency as a repair drags — to the "repair" tenant's fabric weight
+# and engine share before every group repair (GatewayReport.pacing).
 from repro.gateway.cache import CacheStats, LRUBlockCache
 from repro.gateway.coalescer import PAD_LADDER, CoalescerStats, DecodeCoalescer
 from repro.gateway.gateway import (
+    EnginePool,
     GatewayConfig,
     GatewayReport,
     ObjectGateway,
@@ -34,8 +52,10 @@ from repro.gateway.planner import (
     UnreadableObjectError,
 )
 from repro.gateway.workload import (
+    CapacityLossEvent,
     DEFAULT_TENANT,
     FailureEvent,
+    NodeRecoverEvent,
     Request,
     TenantProfile,
     WorkloadConfig,
@@ -54,7 +74,10 @@ __all__ = [
     "tenant_slo_map",
     "tenant_weight_map",
     "CacheStats",
+    "CapacityLossEvent",
+    "EnginePool",
     "LRUBlockCache",
+    "NodeRecoverEvent",
     "PAD_LADDER",
     "CoalescerStats",
     "DecodeCoalescer",

@@ -23,6 +23,17 @@ Two policies:
 BlockFixer repairs the underlying block, since a repaired block is a
 cheap store read again and should no longer squat on cache capacity at
 reconstruction priority.
+
+Negative entries (TTL'd): a negative entry records "this block is known
+to be down" with an expiry in simulated time. The gateway inserts them
+for every block on a crashed node, so planning skips re-probing known
+failures; they are purged eagerly on the node-recover event (the
+scenario engine's transient-failure path) and when a repair write-back
+heals the block, and they expire on their TTL otherwise — the backstop
+that keeps stale failure knowledge from outliving an unobserved
+recovery. Negative entries consume no data capacity (they hold no
+bytes) and never shadow a positive copy: a cached reconstruction of a
+down block still serves hits.
 """
 
 from __future__ import annotations
@@ -40,6 +51,8 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    negative_hits: int = 0  # availability probes short-circuited
+    negative_expired: int = 0  # TTL lapses (stale failure knowledge)
 
     @property
     def hit_rate(self) -> float:
@@ -63,6 +76,10 @@ class LRUBlockCache:
         self._cost: dict[BlockKey, float] = {}
         self._score: dict[BlockKey, float] = {}
         self._clock = 0.0
+        # negative entries: key -> expiry in simulated seconds (inf for
+        # "until explicitly purged"). Zero-capacity — a tombstone, not a
+        # block — so they live outside the eviction loop entirely.
+        self._negative: dict[BlockKey, float] = {}
 
     def __len__(self) -> int:
         return len(self._blocks)
@@ -118,6 +135,40 @@ class LRUBlockCache:
         if old is not None:
             self._bytes -= old.nbytes
             self._drop_meta(key)
+
+    # -- negative / TTL entries -------------------------------------------------
+    def put_negative(self, key: BlockKey, now: float, ttl: float = float("inf")) -> None:
+        """Record that ``key`` is known-down as of ``now``; the entry
+        expires at now + ttl unless purged first (node recover / repair)."""
+        self._negative[key] = now + ttl
+
+    def is_negative(self, key: BlockKey, now: float) -> bool:
+        """True while a live negative entry covers ``key``. Expired
+        entries are dropped lazily here (the TTL backstop: after it, the
+        gateway re-probes the store instead of trusting stale failure
+        knowledge)."""
+        exp = self._negative.get(key)
+        if exp is None:
+            return False
+        if now >= exp:
+            del self._negative[key]
+            self.stats.negative_expired += 1
+            return False
+        self.stats.negative_hits += 1
+        return True
+
+    def purge_negative(self, keys) -> int:
+        """Eagerly drop negative entries (node recovered / block healed);
+        returns how many were live."""
+        n = 0
+        for key in keys:
+            if self._negative.pop(key, None) is not None:
+                n += 1
+        return n
+
+    @property
+    def negative_entries(self) -> int:
+        return len(self._negative)
 
     # -- internals -------------------------------------------------------------
     def _pick_victim(self) -> BlockKey:

@@ -67,6 +67,28 @@ completion. Decode compute is measured on the real jitted kernels
 (autotuned per backend, batch sizes padded up a fixed ladder so the jit
 cache stays bounded — GatewayReport.jit_cache_entries) and scaled by the
 cluster profile.
+
+Fault scenarios (repro.scenario): ``serve`` consumes node-level cluster
+events mid-run — transient crashes (FailureEvent), recoveries
+(NodeRecoverEvent: blocks return intact, negative cache entries purged)
+and capacity losses (CapacityLossEvent: blocks destroyed, only repair
+restores them). Blocks on down nodes are negative-cached with a TTL so
+planning skips re-probing known failures; loss times feed MTTR samples
+when repair heals (``GatewayReport.mttr_samples``) or the node recovers
+(``restored_samples``), and ``audit_durability`` reports provable data
+loss for traces beyond the code's tolerance.
+
+Closed-loop repair pacing (``repair_pacing=True``): before each group
+repair, a PacingController (storage/repair.py) maps the protected
+tier's recent p99 headroom against ``tenant_slo_p99`` — plus an MTTR
+urgency term as the repair drags — to the "repair" tenant's fabric
+weight AND decode-engine share, applied via
+``NetSimulator.set_tenant_weight`` and ``EnginePool.set_weight``:
+repair backs off while foreground latency is at risk and accelerates
+toward the MTTR target when idle. Decisions land in
+``GatewayReport.pacing``. Repair decode compute itself is billed on the
+shared engine pool as the "repair" tenant, so engine shares bite both
+ways.
 """
 
 from __future__ import annotations
@@ -76,7 +98,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.failure_matrix import independent_clusters
 from repro.core.product_code import CoreCode, CoreCodec
+from repro.core.recoverability import is_recoverable
 from repro.gateway.cache import LRUBlockCache
 from repro.gateway.coalescer import DecodeCoalescer
 from repro.gateway.planner import (
@@ -84,15 +108,23 @@ from repro.gateway.planner import (
     ReadPlan,
     UnreadableObjectError,
 )
-from repro.gateway.workload import DEFAULT_TENANT, FailureEvent, Request
+from repro.gateway.workload import (
+    CapacityLossEvent,
+    DEFAULT_TENANT,
+    FailureEvent,
+    NodeRecoverEvent,
+    Request,
+)
 from repro.storage.blockstore import BlockKey, BlockStore
 from repro.storage.netmodel import (
     ClusterProfile,
+    FOREGROUND_TENANT,
     NetSimulator,
     REPAIR_TENANT,
+    PortTimeline,
     Transfer,
 )
-from repro.storage.repair import BlockFixer
+from repro.storage.repair import BlockFixer, PacingController
 
 PIPELINED = "pipelined"
 SERIAL = "serial"
@@ -128,6 +160,34 @@ class GatewayConfig:
     tenant_slo_p99: dict | None = None  # tenant -> p99 latency target (s)
     admission: str = ADMIT_OFF  # "off" | "reject" | "degrade"
     num_engines: int = 1  # parallel simulated decode engines
+    # tenant -> decode-engine share in (0, 1]. Independent of the fabric
+    # weights: a throttled tenant's launches are rate-capped at
+    # share x pool throughput; unlisted tenants dispatch at full weight
+    # (identical to the tenant-blind least-loaded behavior).
+    engine_weights: dict | None = None
+    # Modeled decode cost: when set, every decode launch (and each
+    # repaired block's codec work) is billed this many scaled seconds
+    # instead of the measured kernel wall time. Payload bytes still come
+    # off the real kernels — only the TIMING model changes — so a run
+    # becomes bit-for-bit replayable (golden traces, paced-vs-fixed
+    # comparisons) with no cold-vs-warm-jit sensitivity. None (default):
+    # measured, best-observed-per-signature billing.
+    decode_cost: float | None = None
+    # -- fault scenarios / closed-loop repair ---------------------------------
+    negative_ttl: float = 5.0  # seconds a known-down block stays negative-cached
+    repair_pacing: bool = False  # SLO-aware closed-loop repair pacing
+    repair_min_share: float = 0.5  # pacer floor (fabric + engine share)
+    repair_max_share: float = 1.0  # pacer ceiling (idle / healthy)
+    repair_mttr_target: float | None = None  # urgency override threshold (s)
+    pacing_window: float = 1.0  # seconds of latency history the pacer observes
+    # Incremental repair drain: at most this many groups repair per
+    # boundary event, with the remainder requeued repair_respacing
+    # seconds later (None => the whole backlog in one shot, the
+    # pre-scenario behavior). Spreading the drain is what lets the
+    # pacer RE-OBSERVE foreground latency between batches — the loop
+    # cannot close inside one atomic repair event.
+    repair_groups_per_run: int | None = None
+    repair_respacing: float = 0.05
 
 
 @dataclass
@@ -151,6 +211,23 @@ class GatewayReport:
     repair_reports: list = field(default_factory=list)
     jit_cache_entries: int = 0  # coalescer's traced-signature count
     rejections: dict = field(default_factory=dict)  # tenant -> refused GETs
+    # time from block loss to repair-heal completion, one sample per
+    # block healed by BlockFixer during this serve() call
+    mttr_samples: list[float] = field(default_factory=list)
+    # time from block loss to availability restoration via a
+    # NodeRecoverEvent (transient failure over — no repair bytes moved)
+    restored_samples: list[float] = field(default_factory=list)
+    # closed-loop repair pacing decisions: (simulated time, share)
+    pacing: list[tuple] = field(default_factory=list)
+
+    @property
+    def mttr_mean(self) -> float:
+        s = self.mttr_samples
+        return sum(s) / len(s) if s else 0.0
+
+    @property
+    def mttr_max(self) -> float:
+        return max(self.mttr_samples) if self.mttr_samples else 0.0
 
     # -- aggregates -----------------------------------------------------------
     @property
@@ -165,8 +242,12 @@ class GatewayReport:
     def rejected(self) -> list[RequestRecord]:
         return [r for r in self.records if r.rejected]
 
-    def latency_percentile(self, q: float, since: float = 0.0) -> float:
-        lats = [r.latency for r in self.completed if r.time >= since]
+    def latency_percentile(
+        self, q: float, since: float = 0.0, until: float = float("inf")
+    ) -> float:
+        """Latency percentile over requests ARRIVING in [since, until) —
+        the one quantile definition every window statistic delegates to."""
+        lats = [r.latency for r in self.completed if since <= r.time < until]
         return float(np.percentile(lats, q)) if lats else 0.0
 
     # -- per-tenant aggregates -------------------------------------------------
@@ -174,12 +255,16 @@ class GatewayReport:
         return [r for r in self.completed if r.tenant == tenant]
 
     def tenant_latency_percentile(
-        self, tenant: str, q: float, since: float = 0.0
+        self,
+        tenant: str,
+        q: float,
+        since: float = 0.0,
+        until: float = float("inf"),
     ) -> float:
         lats = [
             r.latency
             for r in self.completed
-            if r.tenant == tenant and r.time >= since
+            if r.tenant == tenant and since <= r.time < until
         ]
         return float(np.percentile(lats, q)) if lats else 0.0
 
@@ -214,6 +299,83 @@ class GatewayReport:
         )
 
 
+class EnginePool:
+    """``num_engines`` parallel simulated decode-engine timelines with
+    least-loaded dispatch and per-tenant weighted admission.
+
+    Full-weight tenants dispatch exactly as the tenant-blind pool did:
+    earliest-free engine, start at max(ready, engine_free). A tenant with
+    share w < 1 additionally respects a virtual-clock cursor spaced at
+    duration / (w x pool_size) per launch, rate-capping it at w of the
+    pool's aggregate throughput — so a throttled repair tenant's decode
+    work cannot crowd foreground reconstructions off the engines, and
+    the SLO pacer can modulate that share mid-run (``set_weight``).
+
+    Engines keep interval timelines (the fabric's PortTimeline), not
+    just a high-water mark: the idle gap a throttled tenant's cursor
+    wait leaves on an engine is a real hole later full-weight launches
+    backfill — throttling yields capacity to other tenants instead of
+    reserving dead time (mirroring the quantum fabric's preemptible
+    holes). On hole-free timelines earliest-fit placement coincides
+    with least-loaded dispatch, so all-full-weight workloads are
+    schedule-identical to the tenant-blind pool."""
+
+    def __init__(self, num_engines: int, weights: dict | None = None):
+        self.free = [0.0] * num_engines  # per-engine last-end high-water mark
+        self._timelines = [PortTimeline() for _ in range(num_engines)]
+        self._weights: dict = dict(weights or {})
+        for tenant, w in self._weights.items():
+            self._check_weight(tenant, w)
+        self._cursor: dict = {}
+
+    @staticmethod
+    def _check_weight(tenant, w) -> None:
+        if not 0.0 < w <= 1.0:
+            raise ValueError(
+                f"engine weight must be in (0, 1], got {tenant!r}: {w}"
+            )
+
+    def weight_of(self, tenant) -> float:
+        return self._weights.get(tenant, 1.0)
+
+    def set_weight(self, tenant, w: float) -> None:
+        self._check_weight(tenant, w)
+        self._weights[tenant] = w
+
+    def earliest_start(self, now: float) -> float:
+        """Earliest instant at/after ``now`` any engine could begin new
+        work, holes included — the admission estimator's view of decode
+        queueing. (The per-engine high-water marks in ``free`` are NOT
+        usable for this: a throttled tenant's cursor-delayed booking
+        pushes them far out while the timeline before it stays idle.)
+        Probes for a 1 us hole — anything above the timeline's float
+        tolerance, below which zero-length gaps are accepted."""
+        return min(tl.next_fit(now, 1e-6) for tl in self._timelines)
+
+    def dispatch(self, ready: float, dur: float, tenant=None) -> tuple[float, float]:
+        """Schedule one launch; returns (start, end)."""
+        share = 1.0 if tenant is None else self.weight_of(tenant)
+        if share < 1.0:
+            ready = max(ready, self._cursor.get(tenant, 0.0))
+        # earliest-fit across engines (holes included); ties break on the
+        # lowest index, which on hole-free timelines is least-loaded
+        best_e, best_start = 0, float("inf")
+        for e, tl in enumerate(self._timelines):
+            s = tl.next_fit(ready, dur) if dur > 0.0 else max(ready, self.free[e])
+            if s < best_start:
+                best_e, best_start = e, s
+        end = best_start + dur
+        if dur > 0.0:
+            self._timelines[best_e].occupy(best_start, end)
+        self.free[best_e] = max(self.free[best_e], end)
+        if share < 1.0 and dur > 0.0:
+            spacing = dur / (share * len(self.free))
+            self._cursor[tenant] = max(
+                self._cursor.get(tenant, 0.0) + spacing, best_start + spacing
+            )
+        return best_start, end
+
+
 class ObjectGateway:
     """Serves a trace of PUT/GET requests over a BlockStore cluster."""
 
@@ -241,6 +403,21 @@ class ObjectGateway:
         if self.config.num_engines < 1:
             raise ValueError(
                 f"num_engines must be >= 1, got {self.config.num_engines}"
+            )
+        if self.config.decode_cost is not None and self.config.decode_cost <= 0:
+            raise ValueError(
+                f"decode_cost must be positive or None (measured), got "
+                f"{self.config.decode_cost}"
+            )
+        if (
+            self.config.repair_groups_per_run is not None
+            and self.config.repair_groups_per_run < 1
+        ):
+            # a zero budget would requeue a continuation that never
+            # repairs anything — serve() would spin forever
+            raise ValueError(
+                f"repair_groups_per_run must be >= 1 or None, got "
+                f"{self.config.repair_groups_per_run}"
             )
         if self.config.pipeline == SERIAL and self.config.num_engines != 1:
             # the serial baseline prices the PR-1 synchronous loop, which
@@ -299,14 +476,47 @@ class ObjectGateway:
         self._cache_ready: dict[BlockKey, float] = {}
         self._clock = 0.0  # logical time of the request being planned
         # Simulated decode engines: each runs one batched launch at a
-        # time; launches dispatch to the least-loaded engine. The pool
-        # persists across windows so pipelined windows overlap on it.
-        self._engines = [0.0] * self.config.num_engines
+        # time; launches dispatch to the least-loaded engine under the
+        # owning tenant's engine share. The pool persists across windows
+        # so pipelined windows overlap on it; repair decode compute is
+        # billed on it too (as the "repair" tenant), so repair and
+        # foreground reconstruction contend for the same engines.
+        self._pool = EnginePool(
+            self.config.num_engines, weights=self.config.engine_weights
+        )
         # Serial-mode barrier: completion time of the previous window.
         self._window_free = 0.0
+        # Scenario bookkeeping: when each currently-unavailable block was
+        # lost (feeds MTTR samples on heal/recover), persisted across
+        # serve() calls like _healing.
+        self._lost_at: dict[BlockKey, float] = {}
+        # groups whose missing set repair provably cannot shrink right
+        # now (unrecoverable clusters): skipped by continuation runs
+        # until their failure set changes
+        self._repair_stuck: dict[str, frozenset] = {}
+        # SLO-aware repair pacing: observed foreground p99 headroom
+        # modulates the repair tenant's fabric weight and engine share.
+        self._pacer = (
+            PacingController(
+                min_share=self.config.repair_min_share,
+                max_share=self.config.repair_max_share,
+                mttr_target=self.config.repair_mttr_target,
+            )
+            if self.config.repair_pacing
+            else None
+        )
+        slos = self.config.tenant_slo_p99 or {}
+        # the tier the pacer protects: the tightest declared SLO
+        self._pacing_slo = min(slos.values()) if slos else None
 
     # -- availability: store OR cache, gated on repair completion --------------
     def _available(self, key: BlockKey) -> bool:
+        if self.cache is not None and self.cache.is_negative(key, self._clock):
+            # known-down: skip the store probe entirely (negative entries
+            # are purged the moment a recover event or repair write-back
+            # brings the block back, and TTL-expire as a backstop); a
+            # cached reconstruction still serves
+            return key in self.cache
         if self.store.available(key):
             healed_at = self._healing.get(key)
             if healed_at is not None:
@@ -323,11 +533,14 @@ class ObjectGateway:
         # BlockFixer wrote the block back; once the write-back's fabric
         # transfers complete (the _healing gate) it is a cheap store
         # read again and any cached copy stops deserving reconstruction
-        # priority. The re-price is deferred to that simulated moment.
+        # priority. The re-price (and negative-entry purge) is deferred
+        # to that simulated moment.
         if self.cache is not None:
             self._reprice_on_heal.add(key)
 
     def _apply_heal_reprice(self, key: BlockKey) -> None:
+        if self.cache is not None:
+            self.cache.purge_negative([key])
         if key in self._reprice_on_heal:
             self._reprice_on_heal.discard(key)
             if self.cache is not None:
@@ -362,11 +575,17 @@ class ObjectGateway:
     def serve(
         self,
         requests: list[Request],
-        failures: list[FailureEvent] | None = None,
+        failures: list | None = None,
     ) -> GatewayReport:
+        """``failures`` accepts any mix of cluster events — FailureEvent
+        (crash), NodeRecoverEvent, CapacityLossEvent — e.g. a
+        ScenarioTrace's ``cluster_events()``. Events apply mid-run, in
+        time order interleaved with the request stream, so the planner,
+        negative cache, and admission controller see availability change
+        between requests."""
         report = GatewayReport()
         cfg = self.config
-        failures = sorted(failures or [], key=lambda f: f.time)
+        events = sorted(failures or [], key=lambda f: f.time)
         reqs = sorted(requests, key=lambda r: r.time)
         repair_queue: list[tuple[float, int]] = []  # (time, node)
 
@@ -375,13 +594,13 @@ class ObjectGateway:
         batch_deadline = None
 
         def boundary_events(now: float | None):
-            """Apply failure / repair events due before ``now`` (None =>
+            """Apply cluster / repair events due before ``now`` (None =>
             all remaining), flushing the open batch first."""
             nonlocal fi, batch, batch_deadline
             while True:
-                next_fail = failures[fi].time if fi < len(failures) else None
+                next_evt = events[fi].time if fi < len(events) else None
                 next_rep = repair_queue[0][0] if repair_queue else None
-                cands = [t for t in (next_fail, next_rep) if t is not None]
+                cands = [t for t in (next_evt, next_rep) if t is not None]
                 if not cands:
                     return
                 t_evt = min(cands)
@@ -390,16 +609,21 @@ class ObjectGateway:
                 if batch and batch_deadline is not None:
                     self._flush(batch, report)
                     batch, batch_deadline = [], None
-                if next_fail is not None and t_evt == next_fail:
-                    evt = failures[fi]
+                if next_evt is not None and t_evt == next_evt:
+                    evt = events[fi]
                     fi += 1
-                    self.store.fail_nodes([evt.node])
-                    if cfg.repair_on_failure:
+                    wants_repair = self._apply_cluster_event(evt, report)
+                    if wants_repair and cfg.repair_on_failure:
                         repair_queue.append((evt.time + cfg.repair_delay, evt.node))
                         repair_queue.sort()
                 else:
                     t_rep, _node = repair_queue.pop(0)
-                    self._background_repair(t_rep, report)
+                    if self._background_repair(t_rep, report):
+                        # budgeted run left groups pending: drain the
+                        # rest after the respacing interval (-1: a
+                        # continuation, not a fresh failure)
+                        repair_queue.append((t_rep + cfg.repair_respacing, -1))
+                        repair_queue.sort()
 
         for req in reqs:
             boundary_events(req.time)
@@ -569,12 +793,24 @@ class ObjectGateway:
         results, bucket_compute = self.coalescer.execute(
             uops, lambda k: fetched[k]
         )
-        # all sources of a bucket must land before its shared launch runs
+        if self.config.decode_cost is not None:
+            # modeled-cost mode: deterministic per-launch billing
+            bucket_compute = {
+                key: [self.config.decode_cost] * len(v)
+                for key, v in bucket_compute.items()
+            }
+        # all sources of a bucket must land before its shared launch runs;
+        # the bucket bills its engine time to the tenant of the earliest
+        # request that owns one of its ops (a shared launch has exactly
+        # one engine reservation, so it needs exactly one payer)
         bucket_ready: dict[tuple, float] = {}
+        bucket_tenant: dict[tuple, str] = {}
         for j, op in enumerate(uops):
             t_src = max(ready[i][s] for i in owners[j] for s in op.sources)
             key = op.shape_key
             bucket_ready[key] = max(bucket_ready.get(key, 0.0), t_src)
+            if key not in bucket_tenant:
+                bucket_tenant[key] = gets[owners[j][0]][0].tenant
         decode_done: dict[tuple, float] = {}
         if serial:
             # strict staging: no launch before ALL the window's transfers
@@ -586,24 +822,23 @@ class ObjectGateway:
                 (t for key_ready in ready for t in key_ready.values()),
                 default=self._window_free,
             )
-            start = max(window_net, self._engines[0])
-            end = start + sum(sum(v) for v in bucket_compute.values())
-            for key in bucket_ready:
-                decode_done[key] = end
             if bucket_compute:
-                self._engines[0] = end
+                total = sum(sum(v) for v in bucket_compute.values())
+                _, end = self._pool.dispatch(window_net, total)
+                for key in bucket_ready:
+                    decode_done[key] = end
         else:
             # pipelined: issue each bucket's launches as soon as its own
             # sources land, in source-arrival order, each launch onto the
-            # least-loaded decode engine — windows (and a bucket's
-            # top-rung split chunks) overlap across the engine pool
+            # least-loaded decode engine under the owning tenant's engine
+            # share — windows (and a bucket's top-rung split chunks)
+            # overlap across the engine pool
             for key in sorted(bucket_ready, key=bucket_ready.get):
                 key_done = 0.0
                 for dt in bucket_compute[key]:
-                    e = min(range(len(self._engines)), key=self._engines.__getitem__)
-                    start = max(bucket_ready[key], self._engines[e])
-                    end = start + dt
-                    self._engines[e] = end
+                    _, end = self._pool.dispatch(
+                        bucket_ready[key], dt, tenant=bucket_tenant[key]
+                    )
                     key_done = max(key_done, end)
                 decode_done[key] = key_done
 
@@ -696,6 +931,11 @@ class ObjectGateway:
                 self.store.put_block(
                     par_key, np.bitwise_xor(self.store.blocks[par_key], delta)
                 )
+                if self.cache is not None:
+                    # only a parity block actually WRITTEN sheds its
+                    # known-down tombstone; an unavailable one stays
+                    # negative until repair or recovery brings it back
+                    self.cache.purge_negative([par_key])
                 end = self.sim.transfer(
                     Transfer(
                         client,
@@ -722,20 +962,135 @@ class ObjectGateway:
             if self.cache is not None:
                 self.cache.invalidate(old_key)
                 self.cache.invalidate(par_key)
+                # the data write re-placed its block on an alive node:
+                # that tombstone is stale (the parity one is handled in
+                # the write branch above, only when actually written)
+                self.cache.purge_negative([old_key])
             # a client write supersedes any in-flight repair write-back
             self._healing.pop(old_key, None)
             self._healing.pop(par_key, None)
             self._reprice_on_heal.discard(old_key)
             self._reprice_on_heal.discard(par_key)
+            self._lost_at.pop(old_key, None)
+            if self.store.available(par_key):
+                self._lost_at.pop(par_key, None)
         self._expected[oid] = new_data
         return RequestRecord(
             req.time, oid, "put", done - req.time, False, nbytes, 0, 0,
             tenant=req.tenant,
         )
 
+    # -- cluster fault events (scenario engine) ----------------------------------
+    def _apply_cluster_event(self, evt, report: GatewayReport) -> bool:
+        """Apply one node-level fault event; returns True when the event
+        creates missing blocks that background repair should chase."""
+        if isinstance(evt, NodeRecoverEvent):
+            keys = self.store.keys_on_node(evt.node)
+            self.store.heal_node(evt.node)
+            if self.cache is not None:
+                # transient failure over: the node's blocks are back, so
+                # their negative entries expire NOW, not at their TTL
+                self.cache.purge_negative(keys)
+            for key in keys:
+                if self.store.available(key):
+                    t0 = self._lost_at.pop(key, None)
+                    if t0 is not None:
+                        report.restored_samples.append(evt.time - t0)
+            # a recovery can restore the SOURCES a stuck group was
+            # waiting on (its missing set changes, clearing the stuck
+            # memo) — with no failure event left to queue a repair, the
+            # recovery itself must trigger a re-scan when losses remain
+            return bool(self._lost_at or self._repair_stuck)
+        if isinstance(evt, CapacityLossEvent):
+            # capture keys BEFORE the store drops their placement
+            lost = self.store.lose_node_blocks(evt.node)
+            for key in lost:
+                self._lost_at.setdefault(key, evt.time)
+                # data destroyed: any in-flight heal of this key is moot
+                self._healing.pop(key, None)
+                if self.cache is not None:
+                    self.cache.put_negative(
+                        key, evt.time, self.config.negative_ttl
+                    )
+            return bool(lost)
+        # FailureEvent: transient crash — disks survive, the node may
+        # recover with its blocks intact
+        assert isinstance(evt, FailureEvent), f"unknown cluster event {evt!r}"
+        keys = [
+            k for k in self.store.keys_on_node(evt.node) if k in self.store.blocks
+        ]
+        self.store.fail_nodes([evt.node])
+        for key in keys:
+            self._lost_at.setdefault(key, evt.time)
+            if self.cache is not None:
+                self.cache.put_negative(key, evt.time, self.config.negative_ttl)
+        return True
+
     # -- background repair -------------------------------------------------------
-    def _background_repair(self, at_time: float, report: GatewayReport) -> None:
+    def _observed_p99(self, report: GatewayReport, at_time: float) -> float | None:
+        """Recent foreground p99 the pacer reacts to: completed GETs of
+        SLO-declaring tenants (all tenants when none declare) arriving in
+        the trailing ``pacing_window``. None => idle (no recent traffic)."""
+        slos = self.config.tenant_slo_p99 or {}
+        since = at_time - self.config.pacing_window
+        lats = [
+            r.latency
+            for r in report.records
+            if r.latency is not None
+            and r.kind == "get"
+            and since <= r.time <= at_time
+            and (not slos or r.tenant in slos)
+        ]
+        if not lats:
+            return None
+        # same interpolating definition as GatewayReport.latency_percentile
+        # — an index quantile would degenerate to the window MAX below
+        # 100 samples and let one outlier throttle repair
+        return float(np.percentile(lats, 99))
+
+    def _foreground_pressure(self, at_time: float) -> float:
+        """The pacer's fast signal: the estimated completion time of a
+        degraded GET arriving right now — worst committed foreground
+        backlog on any send port plus the k + t source-block
+        serialization such a read pays on its client NIC. Completed-
+        request p99 lags by exactly the queueing it should prevent (a
+        request hurt by repair is only OBSERVED after it finishes
+        waiting); port backlog reflects full-weight repair reservations
+        the moment they are booked, so the loop reacts before the
+        damage reaches the latency records. Zero while no port is
+        backlogged: an idle fabric is no reason to slow repair.
+
+        The backlog is read per SLO-declaring tenant (their fair-share
+        cursors differ when they ride at different fabric weights);
+        without declared SLOs it falls back to the default foreground
+        tenant."""
+        slos = self.config.tenant_slo_p99 or {}
+        tenants = tuple(slos) or (FOREGROUND_TENANT,)
+        backlog = max(
+            (
+                self.sim.send_backlog(node, tenant, at_time)
+                for node in self.store.alive_nodes()
+                for tenant in tenants
+            ),
+            default=0.0,
+        )
+        if backlog <= 0.0:
+            return 0.0
+        serialization = (
+            (self.code.k + self.code.t)
+            * self._block_bytes
+            / self.profile.node_bandwidth
+        )
+        return backlog + serialization
+
+    def _background_repair(self, at_time: float, report: GatewayReport) -> bool:
+        """Repair up to ``repair_groups_per_run`` groups; returns True
+        when pending groups remain (the caller requeues a continuation).
+        Groups whose missing set provably cannot shrink (fix_group ran
+        and left it unchanged) are skipped until their failure set
+        changes — a continuation loop must not spin on data loss."""
         self.fixer.not_before = at_time
+        pending: list[tuple[str, list[BlockKey]]] = []
         for gid in self._groups:
             missing = [
                 (gid, r, c)
@@ -744,20 +1099,114 @@ class ObjectGateway:
                 if not self.store.available((gid, r, c))
             ]
             if not missing:
+                self._repair_stuck.pop(gid, None)
                 continue
-            report.repair_reports.append(self.fixer.fix_group(gid))
+            if self._repair_stuck.get(gid) == frozenset(missing):
+                continue
+            pending.append((gid, missing))
+        budget = self.config.repair_groups_per_run
+        if budget is None:
+            budget = len(pending)
+        for gid, missing in pending[:budget]:
+            if self._pacer is not None:
+                # closed loop: re-evaluate per group, so within one long
+                # repair the share tracks mounting MTTR urgency (the
+                # repair tenant's own makespan is "how long this repair
+                # has been dragging")
+                elapsed_anchor = max(
+                    at_time, self.sim.class_makespan.get(REPAIR_TENANT, 0.0)
+                )
+                oldest = min(
+                    (self._lost_at.get(k, at_time) for k in missing),
+                    default=at_time,
+                )
+                observed = self._observed_p99(report, at_time)
+                pressure = self._foreground_pressure(at_time)
+                if pressure > 0.0:
+                    observed = max(observed or 0.0, pressure)
+                share = self._pacer.share(
+                    observed,
+                    self._pacing_slo,
+                    outstanding_for=elapsed_anchor - oldest,
+                )
+                self.sim.set_tenant_weight(REPAIR_TENANT, share)
+                self._pool.set_weight(REPAIR_TENANT, share)
+                report.pacing.append((round(elapsed_anchor, 6), round(share, 4)))
+            rep = self.fixer.fix_group(gid)
+            report.repair_reports.append(rep)
             # repaired blocks stay invisible to reads until the repair's
-            # background transfers actually complete on the fabric
+            # background transfers complete on the fabric AND its decode
+            # compute clears the (shared, weighted) engine pool
             done = self.sim.class_makespan.get(REPAIR_TENANT, at_time)
+            compute = rep.compute_time
+            if self.config.decode_cost is not None:
+                compute = self.config.decode_cost * rep.blocks_repaired
+            if compute > 0.0:
+                # fetch -> decode -> write-back: the decode cannot start
+                # before the repair's fabric transfers deliver its inputs
+                _, eng_done = self._pool.dispatch(
+                    done, compute, tenant=REPAIR_TENANT
+                )
+                done = max(done, eng_done)
+            still_missing = []
             for key in missing:
                 if self.store.available(key):
                     self._healing[key] = done
+                    if self.cache is not None:
+                        # the block is no longer known-down; the _healing
+                        # gate (not the tombstone) hides it until its
+                        # write-back transfers land
+                        self.cache.purge_negative([key])
+                    t0 = self._lost_at.pop(key, None)
+                    if t0 is not None:
+                        report.mttr_samples.append(done - t0)
+                else:
+                    still_missing.append(key)
+            if still_missing:
+                # fix_group repaired everything it could: what's left is
+                # stuck until the failure set changes (data loss, or a
+                # recovery event restoring sources)
+                self._repair_stuck[gid] = frozenset(still_missing)
+            else:
+                self._repair_stuck.pop(gid, None)
+        return len(pending) > budget
+
+    # -- durability audit ---------------------------------------------------------
+    def audit_durability(self) -> dict:
+        """Ground-truth durability snapshot against the RAW store (cache
+        copies don't count — a reconstruction in gateway memory is not a
+        durable replica): blocks currently missing, blocks in clusters
+        the code provably cannot rebuild (``blocks_lost`` — data loss),
+        and objects no read plan can serve right now."""
+        missing_blocks = 0
+        blocks_lost = 0
+        for gid in self._groups:
+            fm = self.store.failure_matrix(gid, self.code.rows, self.code.n)
+            missing_blocks += int(fm.sum())
+            for cluster in independent_clusters(fm):
+                if not is_recoverable(self.code, cluster):
+                    blocks_lost += int(cluster.sum())
+        store_planner = DegradedReadPlanner(self.store, self.code)
+        unreadable = 0
+        for oid, (gid, row) in self._objects.items():
+            try:
+                store_planner.plan(gid, row)
+            except UnreadableObjectError:
+                unreadable += 1
+        return {
+            "missing_blocks": missing_blocks,
+            "blocks_lost": blocks_lost,
+            "unreadable_objects": unreadable,
+        }
 
     # -- SLO admission estimator -------------------------------------------------
     def _decode_launch_estimate(self) -> float:
         """Expected scaled wall time of one batched decode launch, from
         the coalescer's measured history (0 until the first launch —
-        optimistic, so cold-start traffic is admitted)."""
+        optimistic, so cold-start traffic is admitted). Modeled-cost mode
+        returns the modeled cost exactly."""
+        if self.config.decode_cost is not None:
+            return self.config.decode_cost
         st = self.coalescer.stats
         return st.compute_time / st.decode_calls if st.decode_calls else 0.0
 
@@ -791,7 +1240,7 @@ class ObjectGateway:
             # completion — under load that barrier IS the latency
             est += max(0.0, self._window_free - now)
         if plan.decodes:
-            est += max(0.0, min(self._engines) - now)
+            est += max(0.0, self._pool.earliest_start(now) - now)
             est += self._decode_launch_estimate() * len(plan.decodes)
         return est
 

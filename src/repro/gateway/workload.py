@@ -33,6 +33,29 @@ class Request:
 
 @dataclass(frozen=True)
 class FailureEvent:
+    """Node crash: the node goes dark but its disks survive — a matching
+    ``NodeRecoverEvent`` brings the blocks back intact (reboot, network
+    partition). The scenario engine (repro.scenario) composes these with
+    recoveries, capacity losses and load surges into full fault traces."""
+
+    time: float
+    node: int
+
+
+@dataclass(frozen=True)
+class NodeRecoverEvent:
+    """Transient failure over: the node rejoins with its blocks intact.
+    The gateway purges the node's negative cache entries on this event."""
+
+    time: float
+    node: int
+
+
+@dataclass(frozen=True)
+class CapacityLossEvent:
+    """Permanent loss: the node's blocks are destroyed (disk failure);
+    the node rejoins empty and only repair can restore the data."""
+
     time: float
     node: int
 

@@ -93,7 +93,34 @@ class BlockStore:
                 if k[0] == key[0] and self.available(k)
             }
             free = [n for n in alive if n not in used]
-            self.placement[key] = free[0] if free else alive[0]
+            if free:
+                self.placement[key] = free[0]
+            else:
+                # dense cluster: every alive node already hosts a group
+                # block. Fall back to the weaker-but-essential invariant
+                # (the paper's placement requirement): never co-locate
+                # with another live block of the same ROW or COLUMN, so
+                # one node failure still costs each stripe and each
+                # vertical group at most one block.
+                gid, row, col = key
+                conflict = {
+                    self.placement[k]
+                    for k in self.placement
+                    if k[0] == gid
+                    and k != key
+                    and (k[1] == row or k[2] == col)
+                    and self.available(k)
+                }
+                cands = [n for n in alive if n not in conflict]
+                if not cands:
+                    cands = alive
+                # crc32-keyed pick (process-stable, like _place_group):
+                # always taking the first candidate would funnel every
+                # dense re-placement onto the lowest alive ids and turn
+                # them into post-repair hotspots
+                self.placement[key] = cands[
+                    zlib.crc32(repr(key).encode()) % len(cands)
+                ]
         self.blocks[key] = np.asarray(data)
 
     def node_of(self, key: BlockKey) -> int:
@@ -111,12 +138,30 @@ class BlockStore:
             raise KeyError(f"block {key} unavailable (node failed or missing)")
         return self.blocks[key]
 
+    def keys_on_node(self, node: int) -> list[BlockKey]:
+        """All block keys currently placed on ``node`` (whether or not the
+        node is alive) — the unit a node-level fault event acts on."""
+        return [k for k, n in self.placement.items() if n == node]
+
     # -- failures --------------------------------------------------------------
     def fail_nodes(self, nodes: set[int] | list[int]) -> None:
         self.failed_nodes.update(int(n) for n in nodes)
 
     def heal_node(self, node: int) -> None:
+        """Transient failure over: the node rejoins with its blocks
+        intact (a reboot / network partition, not a disk loss)."""
         self.failed_nodes.discard(int(node))
+
+    def lose_node_blocks(self, node: int) -> list[BlockKey]:
+        """Permanent capacity loss: the node's blocks are destroyed (disk
+        failure). The node itself rejoins the alive set empty — only a
+        repair write-back can bring the data back. Returns the lost keys."""
+        lost = self.keys_on_node(node)
+        for key in lost:
+            self.blocks.pop(key, None)
+            self.placement.pop(key, None)
+        self.failed_nodes.discard(int(node))
+        return lost
 
     def drop_block(self, key: BlockKey) -> None:
         """Targeted single-block corruption (for enforced failure patterns):

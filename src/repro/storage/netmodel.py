@@ -160,6 +160,12 @@ class _PortTimeline:
         self.ends.insert(i, end)
 
 
+# Public name: the interval timeline is shared infrastructure — the
+# gateway's EnginePool schedules decode engines on the same structure
+# the fabric schedules ports on (earliest-fit into holes).
+PortTimeline = _PortTimeline
+
+
 @dataclass
 class NetSimulator:
     """Event-ordered per-node bandwidth simulator with weighted-fair tenants.
@@ -251,6 +257,17 @@ class NetSimulator:
         # timelines are hole-free and weight-1.0 transfers can take the
         # O(1) contiguous fast path (schedule-identical to chunking)
         self._seen_throttled = False
+
+    def set_tenant_weight(self, tenant, weight: float) -> None:
+        """Re-weight a tenant mid-run (the SLO-aware repair pacer's
+        actuator). Applies to quanta scheduled AFTER the call; quanta
+        already placed on the timelines keep their reservations, so the
+        change is a policy update, not a retroactive rewrite of history."""
+        if not 0.0 < weight <= 1.0:
+            raise ValueError(
+                f"tenant weight must be in (0, 1], got {tenant!r}: {weight}"
+            )
+        self._weights[tenant] = weight
 
     def weight_of(self, tenant) -> float:
         """Fair-share weight of a tenant. Unregistered NAMED tenants run

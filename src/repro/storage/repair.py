@@ -60,6 +60,78 @@ class UnrecoverableError(RuntimeError):
 
 
 @dataclass
+class PacingController:
+    """SLO-aware closed-loop repair pacing.
+
+    Maps observed foreground latency headroom to the repair tenant's
+    fabric weight and decode-engine share: when the protected tier's p99
+    approaches its SLO the repair share backs off toward ``min_share``
+    (foreground keeps its headroom); when the tier is comfortably inside
+    its target — or there is no foreground traffic at all — repair
+    accelerates toward ``max_share`` so MTTR stays bounded. An MTTR
+    urgency term overrides the backoff as a repair drags past
+    ``mttr_target``: durability pressure eventually outranks latency
+    pressure, which is what keeps paced MTTR within a constant factor of
+    repair-at-full-weight no matter how long a foreground surge lasts.
+
+    The controller is pure policy — callers feed it observations
+    (``share(...)``) and apply the result to the fabric
+    (``NetSimulator.set_tenant_weight``) and the engine pool.
+    ``min_share`` also acts as the mechanical MTTR guard: repair fabric
+    time at weight w is ~1/w of full-weight time, so min_share=0.5 bounds
+    the paced fabric slowdown at 2x even before urgency kicks in.
+    """
+
+    min_share: float = 0.5  # floor while foreground SLOs are at risk
+    max_share: float = 1.0  # ceiling when idle / healthy
+    # headroom = (slo - p99) / slo. At or below the floor the repair runs
+    # at min_share; at or above the ceiling it runs at max_share; linear
+    # in between (a proportional controller — no integral term, so a
+    # stale observation cannot wind up).
+    headroom_floor: float = 0.0
+    headroom_ceiling: float = 0.5
+    # When a repair has been outstanding longer than mttr_target seconds,
+    # urgency ramps the share back up regardless of foreground pressure
+    # (reaching max_share at 2x the target).
+    mttr_target: float | None = None
+
+    def __post_init__(self):
+        if not 0.0 < self.min_share <= self.max_share <= 1.0:
+            raise ValueError(
+                f"need 0 < min_share <= max_share <= 1, got "
+                f"{self.min_share}/{self.max_share}"
+            )
+        if not self.headroom_floor < self.headroom_ceiling:
+            raise ValueError("headroom_floor must be < headroom_ceiling")
+
+    def share(
+        self,
+        observed_p99: float | None,
+        slo: float | None,
+        outstanding_for: float = 0.0,
+    ) -> float:
+        """Repair share for the next repair step.
+
+        ``observed_p99``: the protected tier's recent p99 (None => no
+        recent foreground traffic, i.e. idle). ``slo``: its latency
+        target (None => nothing to protect). ``outstanding_for``: how
+        long the oldest unrepaired loss has been waiting (seconds)."""
+        if slo is None or observed_p99 is None:
+            base = self.max_share
+        else:
+            headroom = (slo - observed_p99) / slo
+            frac = (headroom - self.headroom_floor) / (
+                self.headroom_ceiling - self.headroom_floor
+            )
+            frac = min(1.0, max(0.0, frac))
+            base = self.min_share + frac * (self.max_share - self.min_share)
+        if self.mttr_target is not None and outstanding_for > self.mttr_target:
+            urgency = min(1.0, outstanding_for / self.mttr_target - 1.0)
+            base = max(base, self.min_share + urgency * (self.max_share - self.min_share))
+        return base
+
+
+@dataclass
 class BlockFixer:
     store: BlockStore
     code: CoreCode

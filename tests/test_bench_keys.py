@@ -4,8 +4,10 @@ snapshot benchmarks/run.py --fast rewrites on every run.
 The ROADMAP's standing rule is that these keys are STABLE: extended,
 never renamed, so the perf trajectory stays comparable across PRs. This
 test pins the key set from PR 2 (throughput / latency / amplification /
-pipelined-vs-serial / p99-under-repair) plus the PR 3 multi-tenant block
-(gateway_tenants), and skips cleanly when the snapshot has not been
+pipelined-vs-serial / p99-under-repair), the PR 3 multi-tenant block
+(gateway_tenants), and the PR 4 fault-scenario block (gateway_scenario:
+paced-vs-fixed repair p99/MTTR plus durability counters), and skips
+cleanly when the snapshot has not been
 generated in this checkout (e.g. a fresh clone running only the unit
 suite).
 """
@@ -33,6 +35,7 @@ TOP_LEVEL_KEYS = {
     "jit_cache_entries",
     "autotune",
     "gateway_tenants",
+    "gateway_scenario",
 }
 
 PIPELINE_KEYS = {
@@ -55,6 +58,14 @@ TENANT_KEYS = {
 }
 
 TIER_NAMES = {"gold", "silver", "bronze"}
+
+SCENARIO_KEYS = {
+    "p99_under_failure_ms",
+    "mttr_s",
+    "durability_events",
+    "blocks_lost",
+    "pacing_updates",
+}
 
 
 @pytest.fixture(scope="module")
@@ -88,6 +99,28 @@ def test_gateway_tenants_keys(bench):
         assert TIER_NAMES <= set(ten[section]), section
     assert {"off", "reject"} <= set(ten["slo_violation_rate"])
     assert {"rps_1", "rps_4", "speedup"} <= set(ten["engines_speedup"])
+
+
+def test_gateway_scenario_keys(bench):
+    sc = bench["gateway_scenario"]
+    missing = SCENARIO_KEYS - set(sc)
+    assert not missing, f"gateway_scenario lost stable keys: {sorted(missing)}"
+    for section in ("p99_under_failure_ms", "mttr_s"):
+        assert {"fixed", "paced"} <= set(sc[section]), section
+    assert "improvement" in sc["p99_under_failure_ms"]
+    assert "ratio" in sc["mttr_s"]
+
+
+def test_gateway_scenario_values_sane(bench):
+    """Light sanity on the scenario block (the real acceptance gates live
+    in benchmarks/gateway_load.py check()): within-tolerance traces lose
+    nothing, both repair modes actually repaired, and pacing decisions
+    were recorded."""
+    sc = bench["gateway_scenario"]
+    assert sc["blocks_lost"] == 0
+    assert sc["durability_events"] > 0
+    assert sc["mttr_s"]["fixed"] > 0 and sc["mttr_s"]["paced"] > 0
+    assert sc["pacing_updates"] > 0
 
 
 def test_gateway_tenants_values_sane(bench):

@@ -14,11 +14,15 @@ fabric-contention rows, and the multi-tenant QoS rows (gateway_tenants):
 weighted-fair tenant tiers (per-tenant p99 ordering and starvation
 bounds), SLO admission control on/off (violation rate and rejections on
 a decode-bound degraded workload), and decode-engine scaling (the same
-workload with num_engines=4 vs 1). Finally the fault-injection scenario
-rows (gateway_scenario): a correlated rack failure under a load surge
-served with SLO-paced vs fixed full-weight repair (p99-under-failure,
-MTTR, durability), and a seeded random within-tolerance trace as the
-durability smoke.
+workload with num_engines=4 vs 1). The ragged-megakernel rows
+(gateway_megakernel) serve an identical mixed-shape decode-bound trace
+(four distinct decode shapes live per window) through both decode
+dataplanes — the descriptor-driven megakernel vs the shape-bucketed
+ladder baseline — gating throughput, live jit signatures per kind, and
+padding. Finally the fault-injection scenario rows (gateway_scenario):
+a correlated rack failure under a load surge served with SLO-paced vs
+fixed full-weight repair (p99-under-failure, MTTR, durability), and a
+seeded random within-tolerance trace as the durability smoke.
 
 Results land in BENCH_gateway.json (stable keys) so the perf trajectory
 is tracked across PRs — benchmarks/run.py writes it on every --fast run.
@@ -102,8 +106,13 @@ def _serve_row(bench, gw, wl_cfg, failures, since=0.0):
         "decode_calls": st.decode_calls,
         "max_batch": st.max_batch,
         "jit_entries": st.jit_entries,
+        "jit_per_kind_max": max(
+            gw.coalescer.jit_entries_by_kind().values(), default=0
+        ),
         "decode_shapes": st.decode_shapes,
         "padded_ops": st.padded_ops,
+        "launches_per_window": round(st.launches_per_window, 3),
+        "padded_byte_ratio": round(st.padded_byte_ratio, 4),
         # repair rides the "repair" tenant; everything else is foreground
         "fg_bytes": sum(
             v for k, v in gw.sim.class_bytes.items() if k != REPAIR_TENANT
@@ -230,8 +239,72 @@ def run(fast: bool = True) -> list[dict]:
         row["background_share"] = share
         rows.append(row)
 
+    rows.extend(_run_megakernel_rows(code, num_nodes, fast))
     rows.extend(_run_tenant_rows(code, num_nodes, fast))
     rows.extend(_run_scenario_rows(code, num_nodes, fast))
+    return rows
+
+
+def _carve_mixed_shapes(gw):
+    """Drop blocks so the live failure set produces FOUR distinct decode
+    shapes per window (the mixed-tenant regime of the warehouse-cluster
+    study): nine single-failure objects decoding vertically at (V,1,t),
+    five broken-column objects forced onto (H,1,k), one double-loss row
+    at (H,2,k), and one triple-loss row at (H,3,k) (3t > k, so the
+    planner picks one covering RS decode). Placement is process-stable,
+    so the ragged and bucketed runs see the identical failure set.
+    Returns the ids of the degraded objects (groups g0..g6, t=3)."""
+    for g in ("g0", "g1", "g2"):  # 9 x (V,1,t): one loss per row,
+        for r in range(3):  # distinct columns keep every column intact
+            gw.store.drop_block((g, r, r))
+    # 5 x (H,1,k): broken columns (two losses in the column) force RS
+    gw.store.drop_block(("g3", 0, 1))
+    gw.store.drop_block(("g3", 2, 1))
+    gw.store.drop_block(("g4", 0, 2))
+    gw.store.drop_block(("g4", 1, 2))
+    gw.store.drop_block(("g5", 1, 3))
+    # 1 x (H,2,k): row 0 of g5 loses columns {3, 4} with column 3 broken
+    gw.store.drop_block(("g5", 0, 3))
+    gw.store.drop_block(("g5", 0, 4))
+    # 1 x (H,3,k): three single losses in one row — columns stay intact
+    # but 3t=9 > k=6, so Table 1 picks one horizontal decode
+    for c in range(3):
+        gw.store.drop_block(("g6", 0, c))
+    return list(range(21))  # objects of g0..g6
+
+
+def _run_megakernel_rows(code, num_nodes, fast: bool) -> list[dict]:
+    """Ragged megakernel vs shape-bucketed baseline
+    (bench="gateway_megakernel") on a decode-bound mixed-shape degraded
+    workload: >= 3 distinct decode shapes (V plus three H variants) live
+    in every window, big blocks on a computation-critical profile so
+    decode time is the latency driver, and odd batch sizes so the
+    bucketed ladder's power-of-two padding is a real cost. Identical
+    trace, placement and failure set — only the decode dataplane
+    differs."""
+    rows = []
+    q = 1 << 16
+    num_objects = 30  # 10 groups; g0..g6 carry the mixed failure set
+    n_req = 300 if fast else 900
+    for coalesce in ("bucketed", "ragged"):
+        cfg = GatewayConfig(batch_window=0.008, coalesce=coalesce)
+        gw = ObjectGateway(
+            code, ClusterProfile.computation_critical(), num_nodes, cfg
+        )
+        rng = np.random.default_rng(31)
+        gw.load_objects(
+            rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8)
+        )
+        degraded = _carve_mixed_shapes(gw)
+        wl = WorkloadConfig(
+            num_objects=len(degraded),  # traffic over the degraded groups
+            num_requests=n_req,
+            arrival_rate=2000.0,
+            seed=31,
+        )
+        row = _serve_row("gateway_megakernel", gw, wl, [])
+        row["coalesce"] = coalesce
+        rows.append(row)
     return rows
 
 
@@ -525,6 +598,7 @@ def bench_summary(rows: list[dict]) -> dict:
                 fab["fifo"]["p99_ms"] / max(fab["quantum"]["p99_ms"], 1e-9), 3
             ),
         },
+        "gateway_megakernel": _megakernel_summary(rows),
         "gateway_tenants": _tenant_summary(rows),
         "gateway_scenario": _scenario_summary(rows),
         "jit_cache_entries": max(r.get("jit_entries", 0) for r in rows),
@@ -536,6 +610,36 @@ def bench_summary(rows: list[dict]) -> dict:
         },
     }
     return out
+
+
+def _megakernel_summary(rows: list[dict]) -> dict:
+    """The gateway_megakernel block of BENCH_gateway.json (stable keys):
+    one descriptor-driven launch set per window vs the shape-bucketed
+    baseline on the mixed-shape decode-bound workload."""
+    mk = {
+        r["coalesce"]: r for r in rows if r["bench"] == "gateway_megakernel"
+    }
+    rag, buck = mk["ragged"], mk["bucketed"]
+    return {
+        "launches_per_window": {
+            "ragged": rag["launches_per_window"],
+            "bucketed": buck["launches_per_window"],
+        },
+        "padded_byte_ratio": {
+            "ragged": rag["padded_byte_ratio"],
+            "bucketed": buck["padded_byte_ratio"],
+        },
+        "ragged_rps": rag["throughput_rps"],
+        "bucketed_rps": buck["throughput_rps"],
+        "speedup": round(
+            rag["throughput_rps"] / max(buck["throughput_rps"], 1e-9), 3
+        ),
+        "jit_entries": {
+            "ragged": rag["jit_entries"],
+            "bucketed": buck["jit_entries"],
+        },
+        "decode_shapes": rag["decode_shapes"],
+    }
 
 
 def _tenant_summary(rows: list[dict]) -> dict:
@@ -695,6 +799,36 @@ def check(rows: list[dict]) -> list[str]:
         f"gateway: jit cache stays within the pad ladder "
         f"(max {max(r.get('jit_entries', 0) for r in rows)} entries) "
         f"({'PASS' if jit_ok else 'FAIL'})"
+    )
+    # ragged megakernel: >= 1.2x the bucketed baseline on the
+    # mixed-shape decode-bound workload...
+    mk = _megakernel_summary(rows)
+    mk_ok = mk["speedup"] >= 1.2 and mk["decode_shapes"] >= 3
+    msgs.append(
+        f"gateway: ragged megakernel beats bucketed >= 1.2x on "
+        f"{mk['decode_shapes']} mixed shapes "
+        f"({mk['bucketed_rps']:.0f} -> {mk['ragged_rps']:.0f} rps, "
+        f"{mk['speedup']:.2f}x) ({'PASS' if mk_ok else 'FAIL'})"
+    )
+    # ...with O(1) live jit signatures per kind and ~no filler bytes
+    mk_rows = {
+        r["coalesce"]: r for r in rows if r["bench"] == "gateway_megakernel"
+    }
+    rag_row = mk_rows["ragged"]
+    # padded_ops == 0 is the structural guarantee (no filler STRIPES);
+    # the byte-level filler (tail/null tiles) stays bounded — the tuner
+    # may trade some of it for fewer launches and grid steps
+    sig_ok = (
+        0 < rag_row["jit_per_kind_max"] <= 2
+        and rag_row["padded_ops"] == 0
+        and rag_row["padded_byte_ratio"] < 0.5
+    )
+    msgs.append(
+        f"gateway: megakernel holds <= 2 signatures/kind "
+        f"({rag_row['jit_entries']} total), 0 filler stripes, "
+        f"bounded tile filler ({rag_row['padded_byte_ratio']:.1%} vs "
+        f"bucketed {mk_rows['bucketed']['padded_byte_ratio']:.1%} of "
+        f"staged bytes) ({'PASS' if sig_ok else 'FAIL'})"
     )
     # contention: repair bytes ride the shared fabric
     cont = [r for r in rows if r["bench"] == "gateway_contention"]

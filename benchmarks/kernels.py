@@ -1,6 +1,9 @@
 """Kernel microbench: Pallas GF(2^8) matmul (RS encode/decode) and XOR
 parity vs the pure-jnp oracles — us/call in interpret mode (CPU) and the
-structural VMEM/roofline numbers for the TPU target.
+structural VMEM/roofline numbers for the TPU target — plus the ragged
+decode megakernel (kernels/ragged_decode.py) against an equal-bytes
+sequence of per-shape stacked launches, the launch-overhead contrast the
+gateway's ``gateway_megakernel`` rows measure end to end.
 
 The paper's compute contrast (cheap XOR repair vs RS decode) shows up
 directly as the flop/byte gap between the two kernels.
@@ -16,6 +19,7 @@ import numpy as np
 
 from repro.coding import rs
 from repro.kernels import ops, ref
+from repro.kernels.gf256_matmul import expand_coeff_bitplanes
 
 
 def _time(fn, *args, reps=3) -> float:
@@ -58,7 +62,53 @@ def run(fast: bool = True) -> list[dict]:
              "bytes_moved": 6 * q,
              "tpu_bound_us": round(6 * q / 819e9 * 1e6, 2)}
         )
+    rows.extend(_ragged_rows(fast))
     return rows
+
+
+def _ragged_rows(fast: bool) -> list[dict]:
+    """Megakernel microbench: one descriptor-driven launch over C mixed
+    tiles vs C single-shape stacked launches of the same bytes (the
+    per-launch overhead the gateway's window pays C times without it).
+    Correctness is checked against the jnp oracle per tile."""
+    rng = np.random.default_rng(4)
+    kk, c = 6, 32
+    tn = 16384 if fast else 65536
+    coef_rows = rng.integers(0, 256, (c, kk), dtype=np.uint8)
+    mc = np.stack(
+        [expand_coeff_bitplanes(coef_rows[i][None, :])[0] for i in range(c)]
+    )
+    data = rng.integers(0, 256, (c, kk, tn), dtype=np.uint8)
+    jdata = jnp.asarray(data)
+    t_mega = _time(
+        lambda d: ops.gf256_ragged(mc, d, interpret=True), jdata
+    )
+    per_tile = [jnp.asarray(data[i]) for i in range(c)]
+
+    def _stacked(_d):
+        # return every output so the timer blocks on ALL c launches,
+        # not just the last dispatch of an async queue
+        return [
+            ops.gf256_matmul(coef_rows[i][None, :], per_tile[i],
+                             block_n=tn, interpret=True)
+            for i in range(c)
+        ]
+
+    t_split = _time(_stacked, jdata)
+    out = np.asarray(ops.gf256_ragged(mc, jdata, interpret=True))
+    match = all(
+        (out[i] == np.asarray(
+            ref.gf256_matmul(jnp.asarray(coef_rows[i][None, :]), per_tile[i])
+        )[0]).all()
+        for i in range(c)
+    )
+    return [
+        {"bench": "kernel_ragged_decode", "tiles": c, "tile_bytes": tn,
+         "megakernel_us": round(t_mega, 1),
+         "per_shape_launches_us": round(t_split, 1),
+         "launch_amortization": round(t_split / max(t_mega, 1e-9), 2),
+         "match": bool(match)}
+    ]
 
 
 def check(rows: list[dict]) -> list[str]:
@@ -68,7 +118,14 @@ def check(rows: list[dict]) -> list[str]:
 
 
 if __name__ == "__main__":
+    import sys
+
+    from benchmarks.run import ensure_headless_backend
+
+    print(f"backend: {ensure_headless_backend()}")
     rows = run()
     for r in rows:
         print(r)
-    print("\n".join(check(rows)))
+    msgs = check(rows)
+    print("\n".join(msgs))
+    sys.exit(1 if any("FAIL" in m for m in msgs) else 0)

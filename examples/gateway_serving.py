@@ -3,15 +3,18 @@
 The gateway is the client-facing layer over the simulated block store:
 a Zipf/Poisson request trace is planned per-request against the live
 failure set (vertical XOR at t blocks vs horizontal RS at k — the
-paper's Table 1), concurrent degraded reads sharing a decode shape are
-coalesced into single batched Pallas GF(256) launches (batch sizes
-padded up a fixed ladder so the jit cache stays bounded, kernel
-parameters autotuned per backend), a small rebuild-cost-aware cache
+paper's Table 1), and each window's reconstructions — however mixed
+their shapes — are staged as fixed-width descriptor tiles and decoded
+by the ragged MEGAKERNEL (GatewayConfig.coalesce="ragged", the
+default): one descriptor-driven Pallas launch set per kind, <= 2 live
+jit signatures per kind, tile widths autotuned per backend and the
+winners persisted across processes. A small rebuild-cost-aware cache
 absorbs hot reconstructions, and background repair contends with
 foreground reads on the same simulated fabric — preemptively shared in
 fixed quanta, so a repair transfer cannot head-of-line-block a read.
 The serve path is the pipelined dataplane: window N+1's fetches overlap
-window N's decode launches on the simulated decode-engine pool.
+window N's decode launches on the simulated decode-engine pool, which
+spreads one megakernel launch across engines by tile ranges.
 
 Multi-tenant QoS (--tenants): every request carries a tenant tag; each
 tenant's fabric traffic is shaped by its weighted-fair quantum ratio
@@ -102,9 +105,11 @@ def main():
     print(f"  degraded GETs   {len(deg):8d} "
           f"({report.reconstruction_blocks_per_degraded_get:.1f} reconstruction "
           f"blocks each; vertical costs t={code.t}, horizontal k={code.k})")
-    print(f"  batched decode  {st.decode_ops:8d} reconstructions in "
-          f"{st.decode_calls} kernel launches (max batch {st.max_batch}, "
-          f"{st.jit_entries} jit entries)")
+    print(f"  ragged decode   {st.decode_ops:8d} reconstructions in "
+          f"{st.decode_calls} megakernel launches (max batch "
+          f"{st.max_batch}, {st.jit_entries} live jit entries, "
+          f"{st.launches_per_window:.1f} launches/window, "
+          f"{st.padded_byte_ratio:.0%} tile filler)")
     print(f"  block cache     {gw.cache.stats.hits:8d} hits / "
           f"{gw.cache.stats.misses} misses ({gw.cache.stats.hit_rate:.0%})")
     fg_mb = sum(

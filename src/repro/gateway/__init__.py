@@ -1,9 +1,16 @@
 # Client-facing object-storage serving layer over the simulated CORE
 # cluster: Zipf/Poisson workloads, per-request degraded-read planning
-# (paper Table 1), a pipelined fetch->decode->verify dataplane with
-# shape-bucketed batched GF(256) decode (ladder-padded, autotuned,
-# bounded jit cache), rebuild-cost-aware block caching, and weighted-fair
-# quantum fabric sharing between any number of tenants.
+# (paper Table 1), a pipelined fetch->decode->verify dataplane whose
+# decode stage is the ragged MEGAKERNEL (GatewayConfig.coalesce,
+# default "ragged"): a window's whole mixed-shape decode set — H and V
+# ops of any (M, K, blocklen) — is staged as fixed-width descriptor
+# tiles and decoded in ONE Pallas launch per kind, with <= 2 traced
+# signatures per kind and only tail-tile padding; the measured launch
+# time is split by tile ranges into per-op LaunchUnits so the engine
+# pool spreads one launch across engines. coalesce="bucketed" keeps
+# the per-shape stacked launches (ladder-padded, autotuned) as the
+# measured baseline. Plus rebuild-cost-aware block caching and
+# weighted-fair quantum fabric sharing between any number of tenants.
 #
 # Tenancy and SLOs: every request is tagged with a tenant; each tenant's
 # fabric traffic is shaped by its weighted-fair quantum ratio
@@ -37,7 +44,12 @@
 # urgency as a repair drags — to the "repair" tenant's fabric weight
 # and engine share before every group repair (GatewayReport.pacing).
 from repro.gateway.cache import CacheStats, LRUBlockCache
-from repro.gateway.coalescer import PAD_LADDER, CoalescerStats, DecodeCoalescer
+from repro.gateway.coalescer import (
+    PAD_LADDER,
+    CoalescerStats,
+    DecodeCoalescer,
+    LaunchUnit,
+)
 from repro.gateway.gateway import (
     EnginePool,
     GatewayConfig,
@@ -81,6 +93,7 @@ __all__ = [
     "PAD_LADDER",
     "CoalescerStats",
     "DecodeCoalescer",
+    "LaunchUnit",
     "GatewayConfig",
     "GatewayReport",
     "ObjectGateway",

@@ -1,42 +1,70 @@
-"""Request coalescer: batch concurrent degraded-read decodes that share a
-decode shape into ONE stacked kernel launch.
+"""Request coalescer: execute a window's degraded-read decodes in as few
+Pallas launches as the shape mix allows.
 
-Under failures, a popular object's neighbours all degrade the same way
-(same (kind, M, K) decode shape, same block size), so a busy gateway sees
-many same-shaped decodes per batching window. Dispatching them one by one
-pays per-launch overhead B times; the stacked (B, M, K) x (B, K, N)
-Pallas entry (kernels/gf256_matmul.py) pays it once. Vertical XOR repairs
-batch the same way through the stacked xor_parity kernel.
+Two dataplanes share one interface (``DecodeCoalescer(mode=...)``):
 
-Recompilation control: the batch size B is a jit shape key, and organic
-traffic produces a different B almost every window — each one a fresh
-trace/compile. Batches are therefore padded up a fixed power-of-two
-ladder (PAD_LADDER) by replicating the first stripe, so the distinct
-traced signatures per decode shape stay logarithmic in the largest batch
-ever seen (<= len(PAD_LADDER)) instead of linear in traffic diversity.
-``stats.jit_entries`` counts live signatures so recompilation regressions
-are visible in GatewayReport and the benchmarks.
+**Ragged megakernel (default, ``mode="ragged"``).** A realistic mixed-
+tenant window holds decodes of MIXED shapes — horizontal RS ops with
+varying target counts, vertical XOR repairs, ragged byte lengths — and
+per-shape launches pay per-launch overhead once per bucket plus up to 2x
+batch-ladder filler. The ragged path instead stages the WHOLE window per
+kind: every decode row (one output row of one op) is cut into fixed-
+width tiles (width autotuned, capped to the longest row), gathered into
+a preallocated staging buffer ``(C, K, TN)`` with a per-tile descriptor
+(op id, coefficient bit-planes, byte offset, valid length), and decoded
+by ONE descriptor-driven kernel launch whose grid walks tiles
+(kernels/ragged_decode.py). Flattening to ROWS is what removes the
+target count M from the traced shape; its price is that an op with M
+targets stages its K source slabs once per target row — accepted
+because M > 1 is the rare case (multi-loss rows) and the alternative
+(per-tile source indirection in the kernel) needs scalar-prefetch
+support (ROADMAP follow-on). The launch tile count C comes from exactly
+two rungs (small/big chunk), so the LIVE traced signatures per kind
+stay <= 2 no matter how diverse the traffic — ``jit_entries`` is O(1)
+per kind — and ``padded_ops`` is 0 by construction: the only filler is
+tail tiles and the final chunk's null tiles, reported as
+``stats.padded_byte_ratio``. The K axis and tile width are grow-only
+caps: a window exceeding a cap retraces once and retires the outgrown
+signatures (they can never be launched again); cumulative compile churn
+stays visible as ``stats.jit_retraces``.
 
-Kernel parameters (block_n, packed u32 variant) come from the measured
-per-backend sweep in kernels/autotune.py, capped to the actual block
-size so ladder padding never multiplies kernel work.
+Staging-buffer contract: buffers are preallocated once per (kind, C)
+and reused across windows; the gather writes each source's bytes
+straight into its tile slab (no intermediate ``np.stack`` pyramids),
+zero-filling K-axis padding and tile tails — zero bytes are the
+identity for both GF(256) products and XOR, so the kernel needs no
+masking and the host slices each row's valid prefix back out.
+
+**Shape buckets (``mode="bucketed"``, the pre-megakernel baseline).**
+One stacked launch per (kind, M, K, blocklen) bucket, batch sizes
+padded up a fixed power-of-two ladder (PAD_LADDER) by replicating the
+first stripe, buckets beyond the top rung split into top-rung chunks.
+Kept as the measured comparison baseline (benchmarks/gateway_load.py
+``gateway_megakernel`` rows) and the property-test oracle.
+
+Engine-pool integration: ``execute`` returns a list of ``LaunchUnit``s
+— the simulated-compute quanta the gateway dispatches onto its parallel
+decode engines. A bucketed launch is one unit owning its batch; a
+megakernel launch is SPLIT by tile ranges into one unit per op, each
+billed its tile share of the measured launch time, so one physical
+launch can still spread across engines. The gateway gates every unit
+of a launch on the launch-wide source barrier (the staging buffer
+holds all its ops' tiles), keyed by ``launch_id``.
 
 Compute time is measured on the real jitted kernels (block_until_ready)
-and scaled by the cluster profile, mirroring BlockFixer's convention —
-reported PER LAUNCH so the gateway's engine dispatcher can spread a
-bucket's launches over parallel decode engines. Each traced signature is
-billed at its BEST-observed execution time: the kernel's intrinsic cost
-is its fastest run, and transient host stalls (a noisy neighbour during
-one launch) are not properties of the simulated hardware — without the
-floor, one slow wall-clock sample would skew a whole simulated-latency
-distribution.
+and scaled by the cluster profile, mirroring BlockFixer's convention.
+Each traced signature is billed at its BEST-observed execution time:
+the kernel's intrinsic cost is its fastest run, and transient host
+stalls (a noisy neighbour during one launch) are not properties of the
+simulated hardware — without the floor, one slow wall-clock sample
+would skew a whole simulated-latency distribution.
 """
 
 from __future__ import annotations
 
 import bisect
 import time
-from collections import defaultdict
+from collections import Counter, defaultdict
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -46,11 +74,18 @@ import numpy as np
 
 from repro.gateway.planner import DecodeOp
 from repro.kernels import autotune, ops
+from repro.kernels import ragged_decode as _rdk
+from repro.kernels.gf256_matmul import expand_coeff_bitplanes
+from repro.kernels.ops import _next_pow2
 from repro.storage.blockstore import BlockKey
 
-# Batch-size rungs: B pads up to the next rung (powers of two). Buckets
-# larger than the top rung are SPLIT into top-rung launches, so the
-# distinct traced signatures per decode shape are truly <= len(PAD_LADDER).
+RAGGED = "ragged"
+BUCKETED = "bucketed"
+
+# Batch-size rungs for the bucketed baseline: B pads up to the next rung
+# (powers of two). Buckets larger than the top rung are SPLIT into
+# top-rung launches, so the distinct traced signatures per decode shape
+# are truly <= len(PAD_LADDER).
 PAD_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
@@ -61,23 +96,61 @@ def ladder_rung(b: int) -> int:
     return PAD_LADDER[bisect.bisect_left(PAD_LADDER, b)]
 
 
+@dataclass(frozen=True)
+class LaunchUnit:
+    """One simulated-compute quantum the gateway schedules on its decode
+    engine pool. ``op_indices`` are positions in the ``execute`` op
+    list; ``fraction`` is this unit's share of its physical launch's
+    wall time (1.0 for a bucketed launch; a megakernel launch splits by
+    tile ranges, one unit per op), so modeled-cost billing can charge
+    ``decode_cost x fraction`` and still sum to one launch."""
+
+    op_indices: tuple[int, ...]
+    compute: float  # scaled seconds
+    kind: str
+    launch_id: int
+    fraction: float = 1.0
+
+
 @dataclass
 class CoalescerStats:
     decode_ops: int = 0  # logical reconstructions requested
     decode_calls: int = 0  # actual kernel launches issued
-    padded_ops: int = 0  # ladder filler stripes launched (overhead)
-    max_batch: int = 0
+    padded_ops: int = 0  # ladder filler stripes launched (bucketed only)
+    max_batch: int = 0  # most ops sharing one launch
     compute_time: float = 0.0  # scaled seconds, cumulative
-    batch_sizes: list[int] = field(default_factory=list)
+    windows: int = 0  # execute() calls that had work
+    staged_bytes: int = 0  # useful source bytes staged for kernels
+    padded_bytes: int = 0  # filler staged alongside (tails, rungs)
+    # ops-per-launch histogram. Bounded: at most one key per distinct
+    # batch size (<= PAD_LADDER[-1] of them), unlike the unbounded
+    # per-launch list it replaced — a week-long scenario run no longer
+    # accretes one int per launch.
+    batch_hist: dict[int, int] = field(default_factory=dict)
     ops_by_kind: dict[str, int] = field(default_factory=dict)
     sources_by_kind: dict[str, int] = field(default_factory=dict)
-    jit_entries: int = 0  # distinct traced (shape, B, q) signatures
-    decode_shapes: int = 0  # distinct decode shape_keys ever launched
+    jit_entries: int = 0  # LIVE traced kernel signatures (see below)
+    jit_retraces: int = 0  # every trace ever taken (compile churn)
+    decode_shapes: int = 0  # distinct decode shape_keys ever executed
 
     @property
     def coalescing_ratio(self) -> float:
         """ops per launch; > 1 means batching is happening."""
         return self.decode_ops / self.decode_calls if self.decode_calls else 0.0
+
+    @property
+    def launches_per_window(self) -> float:
+        return self.decode_calls / self.windows if self.windows else 0.0
+
+    @property
+    def padded_byte_ratio(self) -> float:
+        """Filler fraction of all bytes staged for decode kernels."""
+        total = self.staged_bytes + self.padded_bytes
+        return self.padded_bytes / total if total else 0.0
+
+    def record_batch(self, n_ops: int) -> None:
+        self.batch_hist[n_ops] = self.batch_hist.get(n_ops, 0) + 1
+        self.max_batch = max(self.max_batch, n_ops)
 
     def sources_per_op(self, kind: str) -> float:
         """Mean source blocks per reconstruction of this kind — the
@@ -92,65 +165,266 @@ class DecodeCoalescer:
         compute_scale: float = 1.0,
         interpret: bool | None = None,
         autotune_kernels: bool = True,
+        mode: str = RAGGED,
     ):
+        if mode not in (RAGGED, BUCKETED):
+            raise ValueError(
+                f"mode must be 'ragged' or 'bucketed', got {mode!r}"
+            )
         self.compute_scale = compute_scale
         self.interpret = interpret
         self.autotune_kernels = autotune_kernels
+        self.mode = mode
         self.stats = CoalescerStats()
-        self._warm: set[tuple] = set()  # traced (shape, B, q) signatures
+        self._warm: set[tuple] = set()  # traced kernel signatures
         self._best: dict[tuple, float] = {}  # per-signature fastest run
         self._tuned: dict[str, autotune.TunedKernel] = {}
+        self._shapes: set[tuple] = set()  # distinct op shape_keys seen
+        # ragged-path state: grow-only caps (retracing only on growth
+        # keeps the signature set at the two chunk rungs for steady
+        # traffic) and the reusable staging buffers, keyed (kind, C).
+        self._k_cap: dict[str, int] = {}
+        self._tile_n: dict[str, int] = {}
+        self._staging: dict[tuple, np.ndarray] = {}
+
+    def jit_entries_by_kind(self) -> dict[str, int]:
+        """Distinct traced signatures per decode kind — the megakernel's
+        O(1)-per-kind guarantee, observable (tests/test_ragged_decode)."""
+        out: dict[str, int] = {}
+        for sig in self._warm:
+            kind = sig[1][0] if sig[0] == BUCKETED else sig[1]
+            out[kind] = out.get(kind, 0) + 1
+        return out
 
     def _tuned_for(self, kind: str) -> autotune.TunedKernel | None:
         if not self.autotune_kernels:
             return None
-        tuned = self._tuned.get(kind)
+        key = f"{self.mode}:{kind}"
+        tuned = self._tuned.get(key)
         if tuned is None:
-            tune = autotune.tuned_xor if kind == "V" else autotune.tuned_gf256
+            if self.mode == RAGGED:
+                tune = (
+                    autotune.tuned_ragged_xor
+                    if kind == "V"
+                    else autotune.tuned_ragged_gf256
+                )
+            else:
+                tune = autotune.tuned_xor if kind == "V" else autotune.tuned_gf256
             tuned = tune(self.interpret)
-            self._tuned[kind] = tuned
+            self._tuned[key] = tuned
         return tuned
 
     def execute(
         self,
         decode_ops: list[DecodeOp],
         fetch: Callable[[BlockKey], np.ndarray],
-    ) -> tuple[list[dict[int, np.ndarray]], dict[tuple, list[float]]]:
-        """Run all ``decode_ops``, batching by shape bucket.
+    ) -> tuple[list[dict[int, np.ndarray]], list[LaunchUnit]]:
+        """Run all ``decode_ops``; returns (results, units).
 
-        Returns (results, bucket_compute) where results[i] maps target
-        column -> reconstructed block for decode_ops[i], and
-        bucket_compute maps each shape_key to the list of scaled wall
-        times of that bucket's launches (top-rung splits produce several
-        per key) — per-launch so the gateway's engine dispatcher can
-        spread a bucket's launches over parallel decode engines and
-        overlap one bucket's decode with another's fabric transfers
-        (the serial path just sums all the values).
-        """
+        ``results[i]`` maps target column -> reconstructed block for
+        ``decode_ops[i]``. ``units`` are the simulated-compute quanta of
+        the launches actually issued (see LaunchUnit): the gateway
+        dispatches each unit onto its engine pool once the unit's ops'
+        sources have landed, so one window's decode work can overlap
+        other windows' fabric transfers and spread over engines."""
         results: list[dict[int, np.ndarray]] = [dict() for _ in decode_ops]
-        bucket_compute: dict[tuple, list[float]] = {}
+        units: list[LaunchUnit] = []
         if not decode_ops:
-            return results, bucket_compute
-        buckets: dict[tuple, list[int]] = defaultdict(list)
-        for i, op in enumerate(decode_ops):
-            buckets[op.shape_key].append(i)
-        for key, all_idxs in buckets.items():
-            kind = key[0]
-            tuned = self._tuned_for(kind)
-            # buckets beyond the top rung split into top-rung launches
-            cap = PAD_LADDER[-1]
-            chunks = [all_idxs[c : c + cap] for c in range(0, len(all_idxs), cap)]
-            for idxs in chunks:
-                self._launch_bucket(key, kind, idxs, tuned, decode_ops,
-                                    fetch, results, bucket_compute)
-        return results, bucket_compute
+            return results, units
+        self.stats.windows += 1
+        for op in decode_ops:
+            self._shapes.add(op.shape_key)
+        if self.mode == RAGGED:
+            by_kind: dict[str, list[int]] = defaultdict(list)
+            for j, op in enumerate(decode_ops):
+                by_kind[op.kind].append(j)
+            for kind in sorted(by_kind):
+                self._execute_ragged(
+                    kind, by_kind[kind], decode_ops, fetch, results, units
+                )
+        else:
+            # buckets split by byte length too (it is a jit shape key
+            # anyway), so ragged-length windows stack cleanly
+            buckets: dict[tuple, list[int]] = defaultdict(list)
+            for i, op in enumerate(decode_ops):
+                n = int(np.asarray(fetch(op.sources[0])).shape[-1])
+                buckets[(op.shape_key, n)].append(i)
+            for (key, _n), all_idxs in buckets.items():
+                kind = key[0]
+                tuned = self._tuned_for(kind)
+                # buckets beyond the top rung split into top-rung launches
+                cap = PAD_LADDER[-1]
+                chunks = [
+                    all_idxs[c : c + cap] for c in range(0, len(all_idxs), cap)
+                ]
+                for idxs in chunks:
+                    self._launch_bucket(
+                        key, kind, idxs, tuned, decode_ops, fetch, results, units
+                    )
+        self.stats.decode_shapes = len(self._shapes)
+        return results, units
 
+    # -- ragged megakernel path -------------------------------------------------
+    def _execute_ragged(
+        self, kind, idxs, decode_ops, fetch, results, units
+    ) -> None:
+        """Stage every op of ``kind`` as descriptor tiles and decode the
+        whole set in chunked megakernel launches (see module docstring
+        for the staging contract)."""
+        tuned = self._tuned_for(kind)
+        # fetch each distinct source once, straight into the gather below
+        src: dict[BlockKey, np.ndarray] = {}
+        # one descriptor row per OUTPUT row: (op_idx, target column,
+        # coefficient bit-planes (K, 8) or None for XOR, sources, length)
+        rows: list[tuple] = []
+        for j in idxs:
+            op = decode_ops[j]
+            for s in op.sources:
+                if s not in src:
+                    src[s] = np.asarray(fetch(s))
+            length = int(src[op.sources[0]].shape[-1])
+            for s in op.sources[1:]:
+                assert src[s].shape[-1] == length, (
+                    f"ragged decode op sources must share a length: "
+                    f"{src[s].shape[-1]} != {length}"
+                )
+            if kind == "V":
+                rows.append((j, op.targets[0], None, op.sources, length))
+            else:
+                planes = expand_coeff_bitplanes(np.asarray(op.coeffs))
+                for m, col in enumerate(op.targets):
+                    rows.append((j, col, planes[m], op.sources, length))
+        k_max = max(len(r[3]) for r in rows)
+        self._k_cap[kind] = max(self._k_cap.get(kind, 0), k_max)
+        k_cap = self._k_cap[kind]
+        max_len = max(r[4] for r in rows)
+        tn_fit = (
+            tuned.block_n_for(max_len)
+            if tuned is not None
+            else min(_rdk.DEFAULT_TILE_N, _next_pow2(max_len))
+        )
+        self._tile_n[kind] = max(self._tile_n.get(kind, 0), tn_fit)
+        tn = self._tile_n[kind]
+        # cut rows into fixed-width tiles
+        tiles: list[tuple[int, int, int]] = []  # (row index, offset, valid)
+        out_rows = [np.empty(r[4], dtype=np.uint8) for r in rows]
+        for ri, (_j, _col, _planes, _sources, length) in enumerate(rows):
+            off = 0
+            while off < length:
+                valid = min(tn, length - off)
+                tiles.append((ri, off, valid))
+                off += valid
+        pos = 0
+        for c in _rdk.chunk_sizes(len(tiles)):
+            self._launch_ragged_chunk(
+                kind, c, tiles[pos : pos + c], rows, src, out_rows,
+                tn, k_cap, tuned, units,
+            )
+            pos += c
+        for ri, (j, col, _planes, _sources, _length) in enumerate(rows):
+            results[j][col] = out_rows[ri]
+        self.stats.decode_ops += len(idxs)
+        self.stats.ops_by_kind[kind] = (
+            self.stats.ops_by_kind.get(kind, 0) + len(idxs)
+        )
+        self.stats.sources_by_kind[kind] = self.stats.sources_by_kind.get(
+            kind, 0
+        ) + sum(len(decode_ops[j].sources) for j in idxs)
+
+    def _buffer(self, key: tuple, shape: tuple) -> np.ndarray:
+        """Preallocated staging buffer, reused across windows; replaced
+        only when a grow-only cap (K, TN) ratchets."""
+        buf = self._staging.get(key)
+        if buf is None or buf.shape != shape:
+            buf = np.zeros(shape, dtype=np.uint8)
+            self._staging[key] = buf
+        return buf
+
+    def _launch_ragged_chunk(
+        self, kind, c, chunk_tiles, rows, src, out_rows, tn, k_cap, tuned, units
+    ) -> None:
+        """Gather one chunk of tiles into the staging buffers, run ONE
+        megakernel launch, scatter outputs, and emit per-op LaunchUnits
+        billed by tile share."""
+        data = self._buffer((kind, "data", c), (c, k_cap, tn))
+        data.fill(0)
+        mc = None
+        if kind != "V":
+            mc = self._buffer((kind, "mc", c), (c, k_cap, 8))
+            mc.fill(0)
+        useful = 0
+        for slot, (ri, off, valid) in enumerate(chunk_tiles):
+            _j, _col, planes, sources, _length = rows[ri]
+            for k, s in enumerate(sources):
+                data[slot, k, :valid] = src[s][off : off + valid]
+            if mc is not None:
+                mc[slot, : planes.shape[0], :] = planes
+            useful += valid * len(sources)
+        packed = bool(tuned.packed) if (tuned is not None and kind != "V") else False
+        interpret = self.interpret
+        if kind == "V":
+            launch = lambda: ops.xor_ragged(jnp.asarray(data), interpret=interpret)
+        else:
+            launch = lambda: ops.gf256_ragged(
+                mc, jnp.asarray(data), interpret=interpret, packed=packed
+            )
+        # Untimed warm-up on first sight of a traced signature: chunk
+        # rung, K cap and tile width are the only jit shape keys, and
+        # the one-off trace/compile cost must not be billed to the
+        # window's simulated decode latency.
+        sig = (RAGGED, kind, c, k_cap, tn, packed)
+        if sig not in self._warm:
+            # a grow-only cap ratchet obsoletes this kind's previous
+            # signatures — they can never be launched again, so the LIVE
+            # set stays at the two chunk rungs per kind; jit_retraces
+            # keeps the cumulative trace count for churn visibility
+            stale = {
+                s
+                for s in self._warm
+                if s[0] == RAGGED
+                and s[1] == kind
+                and (s[3], s[4]) != (k_cap, tn)
+            }
+            self._warm -= stale
+            for s in stale:
+                self._best.pop(s, None)
+            jax.block_until_ready(launch())
+            self._warm.add(sig)
+            self.stats.jit_entries = len(self._warm)
+            self.stats.jit_retraces += 1
+        t0 = time.perf_counter()
+        out = launch()
+        jax.block_until_ready(out)
+        out = np.asarray(out)
+        dt = (time.perf_counter() - t0) * self.compute_scale
+        best = self._best.get(sig)
+        dt = dt if best is None or dt < best else best
+        self._best[sig] = dt
+        for slot, (ri, off, valid) in enumerate(chunk_tiles):
+            out_rows[ri][off : off + valid] = out[slot, :valid]
+        # one unit per op, billed its tile share of the launch, so the
+        # engine pool can spread this single launch across engines
+        # (the gateway still gates all of them on the launch-wide
+        # source barrier)
+        launch_id = self.stats.decode_calls
+        tiles_per_op = Counter(rows[ri][0] for ri, _off, _valid in chunk_tiles)
+        n_valid = len(chunk_tiles)
+        for j in sorted(tiles_per_op):
+            frac = tiles_per_op[j] / n_valid
+            units.append(LaunchUnit((j,), dt * frac, kind, launch_id, frac))
+        self.stats.decode_calls += 1
+        self.stats.compute_time += dt
+        self.stats.record_batch(len(tiles_per_op))
+        self.stats.staged_bytes += useful
+        self.stats.padded_bytes += c * k_cap * tn - useful
+
+    # -- bucketed baseline path -------------------------------------------------
     def _launch_bucket(
-        self, key, kind, idxs, tuned, decode_ops, fetch, results, bucket_compute
+        self, key, kind, idxs, tuned, decode_ops, fetch, results, units
     ) -> None:
         """One stacked launch for ``idxs`` (all sharing shape ``key``),
-        padded up the ladder; appends its measured compute time to
-        ``bucket_compute[key]`` and writes per-op ``results``."""
+        padded up the ladder; emits one LaunchUnit owning the whole
+        batch and writes per-op ``results``."""
         b_pad = ladder_rung(len(idxs))
         # ladder padding: replicate the first stripe — same shape,
         # same coefficients, output rows sliced away below
@@ -176,12 +450,12 @@ class DecodeCoalescer:
         # padded batch size B and byte length are jit shape keys, and
         # the one-off trace/compile cost must not be billed to the
         # window's simulated decode latency.
-        sig = (key, b_pad, data.shape[-1])
+        sig = (BUCKETED, key, b_pad, data.shape[-1])
         if sig not in self._warm:
             jax.block_until_ready(launch())
             self._warm.add(sig)
             self.stats.jit_entries = len(self._warm)
-            self.stats.decode_shapes = len({s[0] for s in self._warm})
+            self.stats.jit_retraces += 1
         t0 = time.perf_counter()
         out = launch()
         jax.block_until_ready(out)
@@ -198,13 +472,17 @@ class DecodeCoalescer:
         best = self._best.get(sig)
         dt = dt if best is None or dt < best else best
         self._best[sig] = dt
-        bucket_compute.setdefault(key, []).append(dt)
+        units.append(
+            LaunchUnit(tuple(idxs), dt, kind, self.stats.decode_calls)
+        )
+        stripe = int(np.prod(data.shape[1:]))  # bytes per staged stripe
+        self.stats.staged_bytes += len(idxs) * stripe
+        self.stats.padded_bytes += (b_pad - len(idxs)) * stripe
         self.stats.compute_time += dt
         self.stats.decode_calls += 1
         self.stats.decode_ops += len(idxs)
         self.stats.padded_ops += b_pad - len(idxs)
-        self.stats.max_batch = max(self.stats.max_batch, len(idxs))
-        self.stats.batch_sizes.append(len(idxs))
+        self.stats.record_batch(len(idxs))
         self.stats.ops_by_kind[kind] = (
             self.stats.ops_by_kind.get(kind, 0) + len(idxs)
         )

@@ -31,13 +31,22 @@ Pipeline stages (config.pipeline):
      cache hits are ready immediately. Under the quantum fabric
      (config.fabric) these transfers preempt long background repair
      transfers at quantum granularity instead of queueing behind them.
-  2. **decode**  — reconstructions are deduped across the window, shape-
-     bucketed, and executed as stacked Pallas launches whose wall time
-     is measured per launch. Launches are dispatched least-loaded-first
-     onto ``num_engines`` parallel simulated decode-engine timelines
-     (multi-core / multi-chip serving); each launch is issued as soon as
-     its bucket's source transfers complete and an engine frees — not
-     after the whole window's fetches.
+  2. **decode**  — reconstructions are deduped across the window and
+     executed by the ragged megakernel dataplane
+     (``config.coalesce="ragged"``, the default): the whole window's
+     mixed-shape decode set is staged as fixed-width descriptor tiles
+     and decoded in ONE Pallas launch per kind (two chunk rungs bound
+     the traced signatures at <= 2 per kind; see gateway/coalescer.py).
+     The coalescer returns LaunchUnits — a megakernel launch is split
+     by tile ranges into one unit per op — and each unit is dispatched
+     least-loaded-first onto ``num_engines`` parallel simulated
+     decode-engine timelines once its LAUNCH's source transfers have
+     all completed (a physical launch's staging buffer holds every one
+     of its ops' tiles) and an engine frees, so a single physical
+     launch still spreads across the pool. ``coalesce="bucketed"`` keeps the
+     pre-megakernel shape-bucketed dataplane (one stacked launch per
+     (kind, M, K, blocklen) bucket, ladder-padded) as the measured
+     baseline.
   3. **verify / deliver** — each GET completes at the max of its direct
      fetches and the decode launches it depends on; contents are checked
      against ground truth host-side (zero simulated cost).
@@ -94,7 +103,7 @@ ways.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -154,6 +163,10 @@ class GatewayConfig:
     interpret: bool | None = None  # kernel backend override
     pipeline: str = PIPELINED  # "pipelined" | "serial" (PR-1 loop)
     autotune: bool = True  # measured kernel-parameter sweep at first use
+    # decode dataplane: "ragged" = one descriptor-driven megakernel
+    # launch per (window, kind); "bucketed" = the pre-megakernel
+    # per-shape stacked launches (kept as the measured baseline)
+    coalesce: str = "ragged"
     record_payloads: bool = False  # sha256 of every GET payload in records
     # -- multi-tenant QoS ------------------------------------------------------
     tenant_weights: dict | None = None  # tenant -> fabric quantum ratio
@@ -210,6 +223,9 @@ class GatewayReport:
     records: list[RequestRecord] = field(default_factory=list)
     repair_reports: list = field(default_factory=list)
     jit_cache_entries: int = 0  # coalescer's traced-signature count
+    decode_launches: int = 0  # physical kernel launches (cumulative)
+    launches_per_window: float = 0.0  # decode launches per batching window
+    padded_byte_ratio: float = 0.0  # filler fraction of staged decode bytes
     rejections: dict = field(default_factory=dict)  # tenant -> refused GETs
     # time from block loss to repair-heal completion, one sample per
     # block healed by BlockFixer during this serve() call
@@ -404,6 +420,11 @@ class ObjectGateway:
             raise ValueError(
                 f"num_engines must be >= 1, got {self.config.num_engines}"
             )
+        if self.config.coalesce not in ("ragged", "bucketed"):
+            raise ValueError(
+                f"coalesce must be 'ragged' or 'bucketed', got "
+                f"{self.config.coalesce!r}"
+            )
         if self.config.decode_cost is not None and self.config.decode_cost <= 0:
             raise ValueError(
                 f"decode_cost must be positive or None (measured), got "
@@ -446,6 +467,7 @@ class ObjectGateway:
             compute_scale=profile.compute_scale,
             interpret=self.config.interpret,
             autotune_kernels=self.config.autotune,
+            mode=self.config.coalesce,
         )
         self.fixer = BlockFixer(
             self.store,
@@ -646,7 +668,11 @@ class ObjectGateway:
             self._flush(batch, report)
             batch, batch_deadline = [], None
         boundary_events(None)
-        report.jit_cache_entries = self.coalescer.stats.jit_entries
+        st = self.coalescer.stats
+        report.jit_cache_entries = st.jit_entries
+        report.decode_launches = st.decode_calls
+        report.launches_per_window = st.launches_per_window
+        report.padded_byte_ratio = st.padded_byte_ratio
         return report
 
     # -- request batch execution ------------------------------------------------
@@ -790,28 +816,26 @@ class ObjectGateway:
                     uops.append(op)
                     owners.append([])
                 owners[j].append(i)
-        results, bucket_compute = self.coalescer.execute(
-            uops, lambda k: fetched[k]
-        )
+        results, units = self.coalescer.execute(uops, lambda k: fetched[k])
         if self.config.decode_cost is not None:
-            # modeled-cost mode: deterministic per-launch billing
-            bucket_compute = {
-                key: [self.config.decode_cost] * len(v)
-                for key, v in bucket_compute.items()
-            }
-        # all sources of a bucket must land before its shared launch runs;
-        # the bucket bills its engine time to the tenant of the earliest
-        # request that owns one of its ops (a shared launch has exactly
-        # one engine reservation, so it needs exactly one payer)
-        bucket_ready: dict[tuple, float] = {}
-        bucket_tenant: dict[tuple, str] = {}
-        for j, op in enumerate(uops):
-            t_src = max(ready[i][s] for i in owners[j] for s in op.sources)
-            key = op.shape_key
-            bucket_ready[key] = max(bucket_ready.get(key, 0.0), t_src)
-            if key not in bucket_tenant:
-                bucket_tenant[key] = gets[owners[j][0]][0].tenant
-        decode_done: dict[tuple, float] = {}
+            # modeled-cost mode: deterministic billing — each unit gets
+            # its FRACTION of one modeled launch, so a launch's units
+            # still sum to exactly decode_cost regardless of dataplane
+            units = [
+                replace(u, compute=self.config.decode_cost * u.fraction)
+                for u in units
+            ]
+        # a unit bills its engine time to the tenant of the earliest
+        # request that owns one of its ops (a unit has exactly one
+        # engine reservation, so it needs exactly one payer)
+        op_ready: list[float] = [
+            max(ready[i][s] for i in owners[j] for s in op.sources)
+            for j, op in enumerate(uops)
+        ]
+        op_tenant: list[str] = [
+            gets[owners[j][0]][0].tenant for j in range(len(uops))
+        ]
+        op_done: list[float] = [0.0] * len(uops)
         if serial:
             # strict staging: no launch before ALL the window's transfers
             # (even direct-only fetches) complete; launches back-to-back
@@ -822,25 +846,32 @@ class ObjectGateway:
                 (t for key_ready in ready for t in key_ready.values()),
                 default=self._window_free,
             )
-            if bucket_compute:
-                total = sum(sum(v) for v in bucket_compute.values())
+            if units:
+                total = sum(u.compute for u in units)
                 _, end = self._pool.dispatch(window_net, total)
-                for key in bucket_ready:
-                    decode_done[key] = end
+                op_done = [end] * len(uops)
         else:
-            # pipelined: issue each bucket's launches as soon as its own
-            # sources land, in source-arrival order, each launch onto the
-            # least-loaded decode engine under the owning tenant's engine
-            # share — windows (and a bucket's top-rung split chunks)
+            # pipelined: a PHYSICAL launch cannot start before every
+            # source staged into it lands (its buffer holds all its
+            # ops' tiles), so all units sharing a launch_id wait for
+            # the launch-wide barrier; past it they dispatch
+            # independently, in arrival order, onto the least-loaded
+            # decode engine under the owning tenant's engine share —
+            # windows (and one megakernel launch's per-op tile ranges)
             # overlap across the engine pool
-            for key in sorted(bucket_ready, key=bucket_ready.get):
-                key_done = 0.0
-                for dt in bucket_compute[key]:
-                    _, end = self._pool.dispatch(
-                        bucket_ready[key], dt, tenant=bucket_tenant[key]
-                    )
-                    key_done = max(key_done, end)
-                decode_done[key] = key_done
+            launch_ready: dict[int, float] = {}
+            for u in units:
+                r = max(op_ready[j] for j in u.op_indices)
+                launch_ready[u.launch_id] = max(
+                    launch_ready.get(u.launch_id, 0.0), r
+                )
+            for u in sorted(units, key=lambda u: launch_ready[u.launch_id]):
+                _, end = self._pool.dispatch(
+                    launch_ready[u.launch_id], u.compute,
+                    tenant=op_tenant[u.op_indices[0]],
+                )
+                for j in u.op_indices:
+                    op_done[j] = max(op_done[j], end)
 
         # 3) verify + deliver
         decoded_per_req: list[dict[int, np.ndarray]] = [dict() for _ in gets]
@@ -861,7 +892,8 @@ class ObjectGateway:
             for key in plan.direct:
                 done = max(done, ready[i][key])
             for op in plan.decodes:
-                done = max(done, decode_done[op.shape_key])
+                okey = (op.group_id, op.row, op.kind, op.targets, op.sources)
+                done = max(done, op_done[unique_idx[okey]])
             digest = None
             if self.config.verify or self.config.record_payloads:
                 payload = self._assemble_payload(req, plan, fetched, decoded_per_req[i])
@@ -873,7 +905,11 @@ class ObjectGateway:
                 gid, row = self._objects[req.object_id]
                 costs = decode_cost.get(i, {})
                 col_done = {
-                    col: decode_done[op.shape_key]
+                    col: op_done[
+                        unique_idx[
+                            (op.group_id, op.row, op.kind, op.targets, op.sources)
+                        ]
+                    ]
                     for op in plan.decodes
                     for col in op.targets
                 }

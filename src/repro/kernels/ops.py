@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import gf256_matmul as _gfk
+from repro.kernels import ragged_decode as _rdk
 from repro.kernels import xor_parity as _xpk
 from repro.kernels.backend import resolve_interpret
 
@@ -111,6 +112,53 @@ def xor_parity_batched(
     data_p, orig_n = _pad_to(data, block_n, axis=-1)
     out = _xpk.xor_parity_batched(data_p, block_n=block_n, interpret=interpret)
     return out[..., :orig_n]
+
+
+def gf256_ragged(
+    mc: np.ndarray,
+    data: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    packed: bool = False,
+    tile_block: int | None = None,
+) -> jnp.ndarray:
+    """Ragged megakernel entry: ONE launch over C fixed-width tiles of
+    MIXED GF(256) decode ops (the gateway coalescer's whole-window decode
+    set — see kernels/ragged_decode.py for the descriptor layout).
+
+    mc: (C, K, 8) per-tile coefficient bit-planes (host-staged); data:
+    (C, K, TN) per-tile source slabs -> (C, TN). ``tile_block`` (tiles
+    per grid step) defaults to the whole chunk under the interpreter and
+    a VMEM-capped power-of-two divisor of C on TPU."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    if tile_block is None:
+        tile_block = _rdk.tile_block_for(c, kk, tn, interpret)
+    return _rdk.ragged_gf256_tiles(
+        jnp.asarray(mc),
+        data.astype(jnp.uint8),
+        tile_block=tile_block,
+        interpret=interpret,
+        packed=packed,
+    )
+
+
+def xor_ragged(
+    data: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    tile_block: int | None = None,
+) -> jnp.ndarray:
+    """Ragged megakernel entry for vertical XOR repairs: data (C, K, TN)
+    per-tile source slabs -> (C, TN), one launch for a whole window's
+    mixed tile set (zero-padded K rows / tail bytes are XOR-identity)."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    if tile_block is None:
+        tile_block = _rdk.tile_block_for(c, kk, tn, interpret)
+    return _rdk.ragged_xor_tiles(
+        data.astype(jnp.uint8), tile_block=tile_block, interpret=interpret
+    )
 
 
 def rs_encode(parity_matrix: np.ndarray, data: jnp.ndarray, **kw) -> jnp.ndarray:

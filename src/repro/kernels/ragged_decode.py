@@ -1,0 +1,198 @@
+"""Pallas TPU kernels: descriptor-driven ragged decode megakernel.
+
+The gateway's decode hot path is a WINDOW of reconstructions with mixed
+shapes — horizontal RS decodes of varying target counts, vertical XOR
+repairs, ragged byte lengths — and the shape-bucketed dataplane pays one
+stacked launch per (kind, M, K, blocklen) bucket, each padded up a
+power-of-two batch ladder.  These kernels collapse a whole window into
+ONE launch per kind: the host cuts every decode ROW (one output row of
+one op) into fixed-width tiles, gathers the tiles into a flat staging
+buffer, and the kernel's grid walks tiles, applying each tile's own
+coefficient row.
+
+Descriptor layout (built host-side by gateway/coalescer.py):
+
+  * ``data``  (C, K, TN) u8 — tile t's K source slabs.  A row of length
+    L occupies ceil(L / TN) consecutive tiles; the tail tile is
+    zero-padded past its valid length (zero bytes contribute zero to
+    both GF(256) products and XOR, so no in-kernel masking is needed —
+    the host slices the valid prefix back out).  Ops with fewer than K
+    sources zero-pad the K axis (a zero row is the identity for both
+    ops).
+  * ``mc``    (C, K, 8) u8 — tile t's coefficient row, bit-plane
+    expanded (gf256_matmul.expand_coeff_bitplanes); the GF kernel only.
+    Replicating the planes per tile is the descriptor table: it is what
+    lets tiles of DIFFERENT ops share one traced signature.
+  * ``out``   (C, TN) u8 — tile t's output slab.
+
+The launch tile count C is the jit shape key, so it is drawn from
+exactly two rungs (``CHUNK_SMALL``, ``CHUNK_BIG``): a window with T
+tiles issues T // CHUNK_BIG big launches plus ceil(rem / CHUNK_SMALL)
+small ones, the last padded with null tiles.  Traced signatures per
+kind are therefore <= 2 regardless of shape diversity — the bucketed
+path's O(shapes x ladder) jit set becomes O(1) — and padding is bounded
+by CHUNK_SMALL - 1 tiles per window, not a 2x batch rung.
+
+Grid: 1-D over tile blocks of ``tile_block`` tiles; the kernel body is
+fully vectorized over the leading tile axis, so under the interpreter a
+whole chunk is a single Python grid step, while on TPU ``tile_block``
+is capped so a block's source slab stays within a VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+
+# Launch-size rungs, in tiles. Two rungs bound the traced signatures per
+# kind at 2 while keeping null-tile padding under CHUNK_SMALL per window
+# (a window with T tiles issues T // CHUNK_BIG big launches, then small
+# ones for the remainder).
+CHUNK_SMALL = 4
+CHUNK_BIG = 32
+
+# Default tile width in bytes (the autotuned sweep in kernels/autotune.py
+# overrides this per backend; callers cap it to the longest row staged).
+DEFAULT_TILE_N = 4096
+
+# Per-grid-step VMEM budget for the (tile_block, K, TN) source slab on a
+# compiled backend; the interpreter runs the whole chunk in one step.
+_VMEM_TILE_BUDGET = 1 << 21
+
+
+def chunk_sizes(num_tiles: int) -> list[int]:
+    """Launch sizes covering ``num_tiles`` tiles from the two rungs:
+    big chunks while they fit, then small ones (the last padded with
+    null tiles). Total padding < CHUNK_SMALL."""
+    assert num_tiles > 0, num_tiles
+    chunks = [CHUNK_BIG] * (num_tiles // CHUNK_BIG)
+    rem = num_tiles - CHUNK_BIG * len(chunks)
+    chunks += [CHUNK_SMALL] * (-(-rem // CHUNK_SMALL))
+    return chunks
+
+
+def tile_block_for(c: int, kk: int, tn: int, interpret: bool) -> int:
+    """Tiles per grid step: the whole chunk under the interpreter (one
+    Python step per launch), VMEM-capped on a compiled backend. Always a
+    power-of-two divisor of ``c`` (chunk sizes are powers of two)."""
+    if interpret:
+        return c
+    tb = c
+    while tb > 1 and tb * kk * tn > _VMEM_TILE_BUDGET:
+        tb //= 2
+    return tb
+
+
+def _ragged_gf_kernel(mc_ref, data_ref, out_ref, *, kk: int):
+    """mc_ref: (TB, K, 8) per-tile coefficient bit-planes; data_ref:
+    (TB, K, TN) source tiles; out_ref: (TB, TN). Vectorized over the
+    tile axis — mixed ops in one block cost nothing extra."""
+    data = data_ref[...]  # (TB, K, TN)
+    mc = mc_ref[...]  # (TB, K, 8)
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.uint8)
+    for b in range(8):
+        bits = jnp.bitwise_and(jnp.right_shift(data, b), jnp.uint8(1))
+        for k in range(kk):
+            contrib = bits[:, k, :] * mc[:, k, b][:, None]  # (TB, TN)
+            acc = jnp.bitwise_xor(acc, contrib)
+    out_ref[...] = acc
+
+
+def _ragged_gf_kernel_packed(mc_ref, data_ref, out_ref, *, kk: int):
+    """u32 mask-spread variant (see gf256_matmul._gf_matmul_kernel_packed
+    for the lane-safety argument): 4 bytes per lane, byte-select via a
+    3-shift-or spread + AND — ~2x fewer VPU lane-ops per tile."""
+    data = data_ref[...]  # (TB, K, TN)
+    mc = mc_ref[...]  # (TB, K, 8)
+    tb, _, tn = data.shape
+    d32 = jax.lax.bitcast_convert_type(
+        data.reshape(tb, kk, tn // 4, 4), jnp.uint32
+    )  # (TB, K, TN/4)
+    one = jnp.uint32(0x01010101)
+    acc = jnp.zeros((tb, tn // 4), jnp.uint32)
+    for b in range(8):
+        bits = jnp.bitwise_and(jnp.right_shift(d32, jnp.uint32(b)), one)
+        sel = jnp.bitwise_or(bits, jnp.left_shift(bits, jnp.uint32(1)))
+        sel = jnp.bitwise_or(sel, jnp.left_shift(sel, jnp.uint32(2)))
+        sel = jnp.bitwise_or(sel, jnp.left_shift(sel, jnp.uint32(4)))
+        for k in range(kk):
+            c32 = mc[:, k, b].astype(jnp.uint32) * one  # (TB,) byte-splat
+            acc = jnp.bitwise_xor(
+                acc, jnp.bitwise_and(sel[:, k, :], c32[:, None])
+            )
+    out_ref[...] = jax.lax.bitcast_convert_type(acc, jnp.uint8).reshape(tb, tn)
+
+
+def _ragged_xor_kernel(data_ref, out_ref, *, kk: int):
+    """data_ref: (TB, K, TN) -> out_ref (TB, TN): XOR over the K axis
+    per tile (zero-padded K rows are the XOR identity)."""
+    data = data_ref[...]
+    acc = data[:, 0, :]
+    for r in range(1, kk):
+        acc = jnp.bitwise_xor(acc, data[:, r, :])
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_block", "interpret", "packed")
+)
+def ragged_gf256_tiles(
+    mc: jnp.ndarray,
+    data: jnp.ndarray,
+    *,
+    tile_block: int,
+    interpret: bool | None = None,
+    packed: bool = False,
+) -> jnp.ndarray:
+    """One descriptor-driven launch over C tiles of mixed GF(256) ops.
+
+    mc: (C, K, 8) per-tile coefficient bit-planes; data: (C, K, TN)
+    source tiles -> (C, TN). C % tile_block == 0. ``packed`` selects the
+    u32 mask-spread body (TN must be a multiple of 4)."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    assert mc.shape == (c, kk, 8), (mc.shape, data.shape)
+    assert c % tile_block == 0, (c, tile_block)
+    kern = (
+        _ragged_gf_kernel_packed
+        if (packed and tn % 4 == 0)
+        else _ragged_gf_kernel
+    )
+    return pl.pallas_call(
+        functools.partial(kern, kk=kk),
+        out_shape=jax.ShapeDtypeStruct((c, tn), jnp.uint8),
+        grid=(c // tile_block,),
+        in_specs=[
+            pl.BlockSpec((tile_block, kk, 8), lambda j: (j, 0, 0)),
+            pl.BlockSpec((tile_block, kk, tn), lambda j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_block, tn), lambda j: (j, 0)),
+        interpret=interpret,
+    )(mc, data)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_block", "interpret"))
+def ragged_xor_tiles(
+    data: jnp.ndarray,
+    *,
+    tile_block: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One descriptor-driven launch over C tiles of mixed XOR repairs:
+    data (C, K, TN) -> (C, TN). C % tile_block == 0."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    assert c % tile_block == 0, (c, tile_block)
+    return pl.pallas_call(
+        functools.partial(_ragged_xor_kernel, kk=kk),
+        out_shape=jax.ShapeDtypeStruct((c, tn), jnp.uint8),
+        grid=(c // tile_block,),
+        in_specs=[pl.BlockSpec((tile_block, kk, tn), lambda j: (j, 0, 0))],
+        out_specs=pl.BlockSpec((tile_block, tn), lambda j: (j, 0)),
+        interpret=interpret,
+    )(data)

@@ -8,12 +8,29 @@ optional dependency are covered automatically. The same guard style
 protects the CI benchmark smoke: benchmarks/run.py applies it for the
 accelerator backend (falling back to the Pallas interpreter sweep when
 no TPU/GPU is attached) rather than for Python packages.
+
+Autotune-cache isolation: kernels/autotune.py persists sweep winners to
+a per-user disk cache by default. A test run must neither read ambient
+home-directory state (a stale winner would silently skip the sweep
+paths the tests exercise) nor write to the user's real cache, so the
+whole suite is pointed at a throwaway path unless the caller already
+pinned one.
 """
 
 from __future__ import annotations
 
 import importlib.util
+import os
 import pathlib
+import tempfile
+
+if "REPRO_AUTOTUNE_CACHE" not in os.environ:
+    # module-level reference keeps the directory alive for the whole
+    # run; TemporaryDirectory's finalizer removes it at interpreter exit
+    _AUTOTUNE_TMP = tempfile.TemporaryDirectory(prefix="repro-autotune-")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+        _AUTOTUNE_TMP.name, "autotune.json"
+    )
 
 # package name -> import markers that identify a module using it
 OPTIONAL_DEPS = {

@@ -36,6 +36,7 @@ TOP_LEVEL_KEYS = {
     "autotune",
     "gateway_tenants",
     "gateway_scenario",
+    "gateway_megakernel",
 }
 
 PIPELINE_KEYS = {
@@ -65,6 +66,18 @@ SCENARIO_KEYS = {
     "durability_events",
     "blocks_lost",
     "pacing_updates",
+}
+
+# PR-5 ragged megakernel block: one descriptor-driven launch set per
+# window vs the shape-bucketed baseline.
+MEGAKERNEL_KEYS = {
+    "launches_per_window",
+    "padded_byte_ratio",
+    "ragged_rps",
+    "bucketed_rps",
+    "speedup",
+    "jit_entries",
+    "decode_shapes",
 }
 
 
@@ -109,6 +122,26 @@ def test_gateway_scenario_keys(bench):
         assert {"fixed", "paced"} <= set(sc[section]), section
     assert "improvement" in sc["p99_under_failure_ms"]
     assert "ratio" in sc["mttr_s"]
+
+
+def test_gateway_megakernel_keys(bench):
+    mk = bench["gateway_megakernel"]
+    missing = MEGAKERNEL_KEYS - set(mk)
+    assert not missing, f"gateway_megakernel lost stable keys: {sorted(missing)}"
+    for section in ("launches_per_window", "padded_byte_ratio", "jit_entries"):
+        assert {"ragged", "bucketed"} <= set(mk[section]), section
+
+
+def test_gateway_megakernel_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): both dataplanes ran, the
+    mixed-shape workload exercised >= 3 decode shapes, and the ragged
+    path's live jit set stays O(1)."""
+    mk = bench["gateway_megakernel"]
+    assert mk["ragged_rps"] > 0 and mk["bucketed_rps"] > 0
+    assert mk["decode_shapes"] >= 3
+    assert 0 < mk["jit_entries"]["ragged"] <= 4  # <= 2 rungs x 2 kinds
+    assert 0.0 <= mk["padded_byte_ratio"]["ragged"] < 1.0
 
 
 def test_gateway_scenario_values_sane(bench):

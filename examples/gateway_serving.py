@@ -34,9 +34,44 @@ fixed full-weight repair and with pacing, and prints p99-under-failure,
 MTTR, the pacer's share decisions, negative-cache activity, and the
 final durability audit.
 
+Sim-time tracing (--trace out.json): the same serve with the
+observability plane on — every request becomes a trace of spans over
+the SIMULATED clock, exported as chrome-tracing JSON that opens
+directly in https://ui.perfetto.dev (or chrome://tracing).
+
+How to read a gateway trace
+---------------------------
+Each subsystem is one process row, each row's threads are its members:
+
+  * ``tenant``  — one thread per tenant. The ``request`` span is the
+    whole GET (arrival to delivery); nested under it: ``plan`` (the
+    degraded-read plan against the live failure set), one ``fetch`` per
+    source block (fabric queueing + transfer, as the request saw it),
+    ``cache.hit`` instants for blocks served from the rebuild cache,
+    ``decode`` attribution spans (args carry kernel kind, launch id,
+    megakernel fraction and tile count), and ``verify`` at delivery.
+  * ``engine``  — one thread per decode engine: ``engine.launch`` spans
+    are the physical launches occupying it; several requests' decodes
+    may share one launch (same ``launch_id``).
+  * ``fabric``  — one thread per send port: ``xfer`` spans are the
+    individual block transfers with their queueing delay in args.
+  * ``repair``  — background repair: ``repair.run`` per repair sweep,
+    ``repair.group`` per repaired group, ``repair.fetch`` per step, and
+    ``repair.heal``/``repair.pacing`` instants (MTTR, share decisions).
+
+Because timestamps are simulated seconds (rendered as microseconds), a
+request whose latency is 30 ms shows a 30 ms span — what you see is
+the modeled contention, not host jitter. To attribute a slow request,
+find its ``request`` span, then look at whichever child ends last:
+that dependency (a queued ``fetch``, a shared ``engine.launch``, a
+paced repair transfer in the way) is the critical path — the same
+decomposition ``repro.obs.critical_path`` computes, whose fleet-level
+stage shares the gateway_obs benchmark reports.
+
     PYTHONPATH=src python examples/gateway_serving.py
     PYTHONPATH=src python examples/gateway_serving.py --tenants
     PYTHONPATH=src python examples/gateway_serving.py --scenario
+    PYTHONPATH=src python examples/gateway_serving.py --trace out.json
 """
 
 import argparse
@@ -63,7 +98,7 @@ from repro.scenario import (
 from repro.storage.netmodel import REPAIR_TENANT, ClusterProfile
 
 
-def main():
+def main(trace_out: str | None = None):
     code = CoreCode(9, 6, 3)
     num_objects, q, num_nodes = 30, 1 << 14, 60
     rng = np.random.default_rng(0)
@@ -77,6 +112,7 @@ def main():
         repair_on_failure=True,     # BlockFixer runs in the background
         repair_delay=0.5,           # failure-detection lag
         background_share=0.5,       # repair gets half a link
+        tracing=trace_out is not None,  # sim-time spans (see --trace)
     )
     gw = ObjectGateway(code, ClusterProfile.network_critical(), num_nodes, cfg)
     gw.load_objects(rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8))
@@ -118,6 +154,18 @@ def main():
     print(f"  fabric          {fg_mb:8.1f} MB foreground, "
           f"{gw.sim.class_bytes.get(REPAIR_TENANT, 0)/1e6:.1f} MB "
           f"background repair ({len(report.repair_reports)} repair runs)")
+
+    if trace_out is not None:
+        from repro.obs import stage_shares, write_chrome_trace
+
+        write_chrome_trace(trace_out, gw.tracer.spans)
+        shares = stage_shares(gw.tracer)
+        dominant = max(shares["shares"], key=shares["shares"].get)
+        print(f"\n  trace           {len(gw.tracer.spans):8d} spans over "
+              f"{gw.tracer.traces_kept} traces -> {trace_out}")
+        print(f"  critical path   {dominant:>8s} dominates "
+              f"({shares['shares'][dominant]:.0%} of total latency; "
+              "open the file in https://ui.perfetto.dev)")
 
 
 def main_tenants():
@@ -221,10 +269,13 @@ if __name__ == "__main__":
                     help="two-tenant QoS demo (weights + SLO admission)")
     ap.add_argument("--scenario", action="store_true",
                     help="fault-injection demo (paced vs fixed repair)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="run the default demo with sim-time tracing and "
+                         "export a Perfetto/chrome-tracing JSON file")
     args = ap.parse_args()
     if args.scenario:
         main_scenario()
     elif args.tenants:
         main_tenants()
     else:
-        main()
+        main(trace_out=args.trace)

@@ -63,6 +63,7 @@ would skew a whole simulated-latency distribution.
 from __future__ import annotations
 
 import bisect
+import logging
 import time
 from collections import Counter, defaultdict
 from dataclasses import dataclass, field
@@ -78,6 +79,8 @@ from repro.kernels import ragged_decode as _rdk
 from repro.kernels.gf256_matmul import expand_coeff_bitplanes
 from repro.kernels.ops import _next_pow2
 from repro.storage.blockstore import BlockKey
+
+_log = logging.getLogger(__name__)
 
 RAGGED = "ragged"
 BUCKETED = "bucketed"
@@ -110,6 +113,7 @@ class LaunchUnit:
     kind: str
     launch_id: int
     fraction: float = 1.0
+    tiles: int = 0  # descriptor tiles this unit covers (0 = bucketed)
 
 
 @dataclass
@@ -388,6 +392,12 @@ class DecodeCoalescer:
             self._warm -= stale
             for s in stale:
                 self._best.pop(s, None)
+            if stale:
+                _log.warning(
+                    "coalescer: kind %r cap ratchet to (K=%d, TN=%d) "
+                    "retired %d traced signature(s)",
+                    kind, k_cap, tn, len(stale),
+                )
             jax.block_until_ready(launch())
             self._warm.add(sig)
             self.stats.jit_entries = len(self._warm)
@@ -411,7 +421,11 @@ class DecodeCoalescer:
         n_valid = len(chunk_tiles)
         for j in sorted(tiles_per_op):
             frac = tiles_per_op[j] / n_valid
-            units.append(LaunchUnit((j,), dt * frac, kind, launch_id, frac))
+            units.append(
+                LaunchUnit(
+                    (j,), dt * frac, kind, launch_id, frac, tiles_per_op[j]
+                )
+            )
         self.stats.decode_calls += 1
         self.stats.compute_time += dt
         self.stats.record_batch(len(tiles_per_op))

@@ -103,6 +103,7 @@ ways.
 from __future__ import annotations
 
 import hashlib
+from collections import deque
 from dataclasses import dataclass, field, replace
 
 import numpy as np
@@ -124,6 +125,9 @@ from repro.gateway.workload import (
     NodeRecoverEvent,
     Request,
 )
+from repro.kernels import autotune
+from repro.obs.metrics import BoundedLog, BoundedSamples, MetricsRegistry
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.storage.blockstore import BlockKey, BlockStore
 from repro.storage.netmodel import (
     ClusterProfile,
@@ -201,6 +205,16 @@ class GatewayConfig:
     # cannot close inside one atomic repair event.
     repair_groups_per_run: int | None = None
     repair_respacing: float = 0.05
+    # -- observability (repro.obs) --------------------------------------------
+    tracing: bool = False  # emit sim-time spans into a bounded Tracer
+    # sampling policy: "always" | "head:N" | "tail:SECONDS" | comma-combos
+    # (keep a trace if ANY matches — slow requests are never dropped)
+    trace_sample: str = "always"
+    trace_capacity: int = 65536  # span ring-buffer size
+    # False => streaming mode: GatewayReport keeps NO per-request list
+    # (records stays empty; aggregates come from the bounded metrics
+    # registry) so resident memory is O(1) in trace length
+    record_requests: bool = True
 
 
 @dataclass
@@ -218,8 +232,28 @@ class RequestRecord:
     rejected: bool = False  # refused by SLO admission control
 
 
+# Completed GETs the repair pacer can observe: (arrival, tenant,
+# latency), last RECENT_CAP only — the trailing pacing_window never
+# needs more, and the cap is what keeps the pacer's input bounded.
+RECENT_CAP = 4096
+
+
 @dataclass
 class GatewayReport:
+    """Per-``serve()`` outcome report: a snapshot over the streaming
+    ``metrics`` registry plus (by default) the raw per-request records.
+
+    Every sample container here is BOUNDED: ``mttr_samples`` /
+    ``restored_samples`` keep exact streaming count/mean/max plus a
+    capped prefix of raw samples, ``pacing`` keeps the last decisions,
+    ``recent`` the trailing completed GETs the repair pacer reads, and
+    the registry's histograms are fixed-bin sketches — so with
+    ``GatewayConfig.record_requests=False`` (streaming mode, ``records``
+    stays empty) resident memory is O(1) in trace length. The aggregate
+    accessors fall back from exact record scans to the registry in that
+    mode; only WINDOWED percentiles (``since``/``until``) require
+    records."""
+
     records: list[RequestRecord] = field(default_factory=list)
     repair_reports: list = field(default_factory=list)
     jit_cache_entries: int = 0  # coalescer's traced-signature count
@@ -229,21 +263,64 @@ class GatewayReport:
     rejections: dict = field(default_factory=dict)  # tenant -> refused GETs
     # time from block loss to repair-heal completion, one sample per
     # block healed by BlockFixer during this serve() call
-    mttr_samples: list[float] = field(default_factory=list)
+    mttr_samples: BoundedSamples = field(default_factory=BoundedSamples)
     # time from block loss to availability restoration via a
     # NodeRecoverEvent (transient failure over — no repair bytes moved)
-    restored_samples: list[float] = field(default_factory=list)
+    restored_samples: BoundedSamples = field(default_factory=BoundedSamples)
     # closed-loop repair pacing decisions: (simulated time, share)
-    pacing: list[tuple] = field(default_factory=list)
+    pacing: BoundedLog = field(default_factory=BoundedLog)
+    # streaming metrics registry: labeled counters / gauges / histograms
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+    recent: deque = field(default_factory=lambda: deque(maxlen=RECENT_CAP))
+    record_requests: bool = True  # False => streaming mode (records empty)
+    _first_arrival: float = float("inf")
+    _last_completion: float = 0.0
+
+    def add_record(self, rec: RequestRecord) -> None:
+        """Route one finished request into the report: the raw record
+        list (unless streaming mode), the metrics registry, and the
+        pacer's bounded ``recent`` window."""
+        if self.record_requests:
+            self.records.append(rec)
+        m = self.metrics
+        m.counter("requests", kind=rec.kind, tenant=rec.tenant).inc()
+        if rec.rejected:
+            m.counter("rejected_requests", tenant=rec.tenant).inc()
+        if rec.latency is None:
+            return
+        m.counter("completed", kind=rec.kind, tenant=rec.tenant).inc()
+        m.histogram("latency", kind=rec.kind, tenant=rec.tenant).observe(
+            max(rec.latency, 1e-9)
+        )
+        m.counter("bytes_read", tenant=rec.tenant).inc(rec.bytes_read)
+        self._first_arrival = min(self._first_arrival, rec.time)
+        self._last_completion = max(self._last_completion, rec.time + rec.latency)
+        if rec.kind == "get":
+            self.recent.append((rec.time, rec.tenant, rec.latency))
+            if rec.degraded:
+                m.counter("degraded_gets").inc()
+                m.counter("degraded_bytes").inc(rec.bytes_read)
+                m.counter("degraded_recon_blocks").inc(rec.reconstruction_blocks)
+
+    def resident_samples(self) -> int:
+        """Total retained entries across every sample container — the
+        number the long-trace benchmark gates on staying bounded."""
+        return (
+            len(self.records)
+            + len(self.recent)
+            + self.mttr_samples.resident()
+            + self.restored_samples.resident()
+            + self.pacing.resident()
+            + self.metrics.resident_samples()
+        )
 
     @property
     def mttr_mean(self) -> float:
-        s = self.mttr_samples
-        return sum(s) / len(s) if s else 0.0
+        return self.mttr_samples.mean
 
     @property
     def mttr_max(self) -> float:
-        return max(self.mttr_samples) if self.mttr_samples else 0.0
+        return self.mttr_samples.max
 
     # -- aggregates -----------------------------------------------------------
     @property
@@ -262,7 +339,12 @@ class GatewayReport:
         self, q: float, since: float = 0.0, until: float = float("inf")
     ) -> float:
         """Latency percentile over requests ARRIVING in [since, until) —
-        the one quantile definition every window statistic delegates to."""
+        the one quantile definition every window statistic delegates to.
+        Streaming mode answers WHOLE-trace quantiles from the registry's
+        merged latency sketch; windowed quantiles need records."""
+        if not self.records and since == 0.0 and until == float("inf"):
+            h = self.metrics.merged_histogram("latency")
+            return h.quantile(q / 100.0) if h is not None else 0.0
         lats = [r.latency for r in self.completed if since <= r.time < until]
         return float(np.percentile(lats, q)) if lats else 0.0
 
@@ -277,6 +359,9 @@ class GatewayReport:
         since: float = 0.0,
         until: float = float("inf"),
     ) -> float:
+        if not self.records and since == 0.0 and until == float("inf"):
+            h = self.metrics.merged_histogram("latency", tenant=tenant)
+            return h.quantile(q / 100.0) if h is not None else 0.0
         lats = [
             r.latency
             for r in self.completed
@@ -289,6 +374,9 @@ class GatewayReport:
         the target — measured over ADMITTED traffic, so rejections trade
         availability for the survivors' latency."""
         gets = [r for r in self.tenant_completed(tenant) if r.kind == "get"]
+        if not gets and not self.records:
+            h = self.metrics.merged_histogram("latency", kind="get", tenant=tenant)
+            return 1.0 - h.cdf(slo) if h is not None and h.count else 0.0
         if not gets:
             return 0.0
         return sum(1 for r in gets if r.latency > slo) / len(gets)
@@ -296,22 +384,26 @@ class GatewayReport:
     @property
     def throughput(self) -> float:
         """Completed requests per second of simulated trace time."""
-        done = self.completed
-        if not done:
+        n = self.metrics.counter_total("completed")
+        if not n:
             return 0.0
-        span = max(r.time + r.latency for r in done) - min(r.time for r in done)
-        return len(done) / span if span > 0 else float("inf")
+        span = self._last_completion - self._first_arrival
+        return n / span if span > 0 else float("inf")
 
     @property
     def bytes_per_degraded_get(self) -> float:
-        deg = self.degraded_gets
-        return sum(r.bytes_read for r in deg) / len(deg) if deg else 0.0
+        deg = self.metrics.counter_total("degraded_gets")
+        return (
+            self.metrics.counter_total("degraded_bytes") / deg if deg else 0.0
+        )
 
     @property
     def reconstruction_blocks_per_degraded_get(self) -> float:
-        deg = self.degraded_gets
+        deg = self.metrics.counter_total("degraded_gets")
         return (
-            sum(r.reconstruction_blocks for r in deg) / len(deg) if deg else 0.0
+            self.metrics.counter_total("degraded_recon_blocks") / deg
+            if deg
+            else 0.0
         )
 
 
@@ -343,6 +435,8 @@ class EnginePool:
         for tenant, w in self._weights.items():
             self._check_weight(tenant, w)
         self._cursor: dict = {}
+        self.tracer = NULL_TRACER  # engine-track span sink (repro.obs)
+        self._tracks = [("engine", f"engine{e}") for e in range(num_engines)]
 
     @staticmethod
     def _check_weight(tenant, w) -> None:
@@ -368,8 +462,14 @@ class EnginePool:
         tolerance, below which zero-length gaps are accepted."""
         return min(tl.next_fit(now, 1e-6) for tl in self._timelines)
 
-    def dispatch(self, ready: float, dur: float, tenant=None) -> tuple[float, float]:
-        """Schedule one launch; returns (start, end)."""
+    def dispatch(
+        self, ready: float, dur: float, tenant=None, ctx: tuple | None = None
+    ) -> tuple[float, float]:
+        """Schedule one launch; returns (start, end). ``ctx`` is an
+        optional (trace_id, parent_id, attrs) observability context —
+        when given (and tracing is on) the launch emits an engine-track
+        span into that trace. Purely observational: the schedule is
+        identical with or without it."""
         share = 1.0 if tenant is None else self.weight_of(tenant)
         if share < 1.0:
             ready = max(ready, self._cursor.get(tenant, 0.0))
@@ -388,6 +488,18 @@ class EnginePool:
             spacing = dur / (share * len(self.free))
             self._cursor[tenant] = max(
                 self._cursor.get(tenant, 0.0) + spacing, best_start + spacing
+            )
+        if ctx is not None and self.tracer.enabled and dur > 0.0:
+            tid, pid, attrs = ctx
+            self.tracer.span(
+                "engine.launch",
+                best_start,
+                end,
+                tid,
+                pid,
+                track=self._tracks[best_e],
+                tenant=tenant,
+                **attrs,
             )
         return best_start, end
 
@@ -448,6 +560,14 @@ class ObjectGateway:
                 "pipeline='serial' models a single-engine synchronous "
                 f"loop; num_engines must be 1, got {self.config.num_engines}"
             )
+        # sim-time observability plane (repro.obs): one tracer threaded
+        # through the fabric, engine pool and repair engine. NULL_TRACER
+        # when disabled, so emission sites cost one attribute check.
+        self.tracer = (
+            Tracer(self.config.trace_sample, self.config.trace_capacity)
+            if self.config.tracing
+            else NULL_TRACER
+        )
         self.store = BlockStore(num_nodes=num_nodes)
         self.sim = NetSimulator(
             profile,
@@ -455,6 +575,7 @@ class ObjectGateway:
             mode=self.config.fabric,
             tenant_weights=self.config.tenant_weights,
         )
+        self.sim.tracer = self.tracer
         self.cache = (
             LRUBlockCache(self.config.cache_bytes, policy=self.config.cache_policy)
             if self.config.cache_bytes
@@ -478,6 +599,7 @@ class ObjectGateway:
             priority=REPAIR_TENANT,
             on_block_repaired=self._on_block_repaired,
         )
+        self.fixer.tracer = self.tracer
         self._objects: dict[int, tuple[str, int]] = {}  # object -> (group, row)
         self._groups: dict[str, list[int]] = {}
         self._expected: dict[int, np.ndarray] = {}  # ground truth (k, q)
@@ -506,6 +628,7 @@ class ObjectGateway:
         self._pool = EnginePool(
             self.config.num_engines, weights=self.config.engine_weights
         )
+        self._pool.tracer = self.tracer
         # Serial-mode barrier: completion time of the previous window.
         self._window_free = 0.0
         # Scenario bookkeeping: when each currently-unavailable block was
@@ -605,7 +728,7 @@ class ObjectGateway:
         time order interleaved with the request stream, so the planner,
         negative cache, and admission controller see availability change
         between requests."""
-        report = GatewayReport()
+        report = GatewayReport(record_requests=self.config.record_requests)
         cfg = self.config
         events = sorted(failures or [], key=lambda f: f.time)
         reqs = sorted(requests, key=lambda r: r.time)
@@ -656,7 +779,7 @@ class ObjectGateway:
                 if batch:
                     self._flush(batch, report)
                     batch, batch_deadline = [], None
-                report.records.append(self._handle_put(req))
+                report.add_record(self._handle_put(req))
                 continue
             if batch and req.time > batch_deadline:
                 self._flush(batch, report)
@@ -673,12 +796,25 @@ class ObjectGateway:
         report.decode_launches = st.decode_calls
         report.launches_per_window = st.launches_per_window
         report.padded_byte_ratio = st.padded_byte_ratio
+        # surface kernel-compile churn and autotune cache behavior as
+        # first-class metrics (they were only visible as raw counters)
+        m = report.metrics
+        m.gauge("jit_entries").set(st.jit_entries)
+        m.gauge("jit_retraces").set(st.jit_retraces)
+        for name, v in autotune.cache_stats().items():
+            m.gauge(f"autotune_{name}").set(v)
+        if self.tracer.enabled:
+            for name, v in self.tracer.stats().items():
+                if isinstance(v, (int, float)):
+                    m.gauge(f"traces_{name}").set(v)
         return report
 
     # -- request batch execution ------------------------------------------------
     def _flush(self, batch: list[Request], report: GatewayReport) -> None:
         serial = self.config.pipeline == SERIAL
+        tracer = self.tracer
         gets: list[tuple[Request, ReadPlan]] = []
+        tids: list[int] = []  # per-get trace id, parallel to ``gets``
         # Blocks whose plans depend on the CACHE copy (store copy is
         # gone) are pinned at plan time — later fetches in this window
         # may otherwise evict them before their request executes.
@@ -689,7 +825,7 @@ class ObjectGateway:
             # a PUT inside a window would break the pin/plan invariants
             assert req.kind == "get", f"batch may only hold GETs, got {req.kind}"
             if req.object_id not in self._objects:
-                report.records.append(
+                report.add_record(
                     RequestRecord(
                         req.time, req.object_id, "get", None, False, 0, 0, 0,
                         tenant=req.tenant,
@@ -701,7 +837,7 @@ class ObjectGateway:
             try:
                 plan = self.planner.plan(gid, row, at=req.time)
             except UnreadableObjectError:
-                report.records.append(
+                report.add_record(
                     RequestRecord(
                         req.time, req.object_id, "get", None, True, 0, 0, 0,
                         tenant=req.tenant,
@@ -727,7 +863,7 @@ class ObjectGateway:
                     report.rejections[req.tenant] = (
                         report.rejections.get(req.tenant, 0) + 1
                     )
-                    report.records.append(
+                    report.add_record(
                         RequestRecord(
                             req.time, req.object_id, "get", None,
                             plan.degraded, 0, 0, 0,
@@ -741,7 +877,21 @@ class ObjectGateway:
                         blk = self.cache.get(key)
                         if blk is not None:
                             pinned[key] = blk
+            tid = 0
+            if tracer.enabled:
+                tid = tracer.begin_trace()
+                tracer.instant(
+                    "plan",
+                    req.time,
+                    tid,
+                    tid,
+                    track=("tenant", req.tenant),
+                    degraded=plan.degraded,
+                    sources=len(plan.source_keys),
+                    decodes=len(plan.decodes),
+                )
             gets.append((req, plan))
+            tids.append(tid)
         if not gets:
             return
 
@@ -753,9 +903,11 @@ class ObjectGateway:
         ready: list[dict[BlockKey, float]] = []
         bytes_read: list[int] = []
         cache_hits: list[int] = []
+        fetch_ats: list[float] = []
         fetched: dict[BlockKey, np.ndarray] = {}
         for i, (req, plan) in enumerate(gets):
             client = self._client_port(req)
+            tid = tids[i]
             fetch_at = (
                 max(plan.planned_at, self._window_free)
                 if serial
@@ -770,6 +922,7 @@ class ObjectGateway:
             key_ready: dict[BlockKey, float] = {}
             nbytes = 0
             hits = 0
+            trk = ("tenant", req.tenant)
             for key in plan.source_keys:
                 blk = pinned.get(key)
                 if blk is None and self.cache is not None:
@@ -777,16 +930,27 @@ class ObjectGateway:
                 if blk is not None:
                     key_ready[key] = max(fetch_at, self._cache_ready.get(key, 0.0))
                     hits += 1
+                    if tracer.enabled:
+                        tracer.instant(
+                            "cache.hit",
+                            key_ready[key],
+                            tid,
+                            tid,
+                            track=trk,
+                            key=key,
+                        )
                 else:
                     blk = self.store.get(key)
+                    src_node = self.store.node_of(key)
                     end = self.sim.transfer(
                         Transfer(
-                            self.store.node_of(key),
+                            src_node,
                             client,
                             blk.nbytes,
                             fetch_at,
                             tenant=req.tenant,
                             deadline=deadline,
+                            ctx=(tid, tid) if tracer.enabled else None,
                         )
                     )
                     key_ready[key] = end
@@ -794,10 +958,26 @@ class ObjectGateway:
                     if self.cache is not None:
                         self.cache.put(key, blk)
                         self._cache_ready[key] = end
+                    if tracer.enabled:
+                        # request-side view: includes fabric queueing
+                        # (the port-track xfer span shows the transfer
+                        # itself, from its first byte)
+                        tracer.span(
+                            "fetch",
+                            fetch_at,
+                            end,
+                            tid,
+                            tid,
+                            track=trk,
+                            key=key,
+                            src=src_node,
+                            bytes=blk.nbytes,
+                        )
                 fetched[key] = blk
             ready.append(key_ready)
             bytes_read.append(nbytes)
             cache_hits.append(hits)
+            fetch_ats.append(fetch_at)
 
         # 2) decode: dedup identical reconstructions (a hot degraded
         # object appears once per window, not once per request), then one
@@ -836,6 +1016,10 @@ class ObjectGateway:
             gets[owners[j][0]][0].tenant for j in range(len(uops))
         ]
         op_done: list[float] = [0.0] * len(uops)
+        # per-op launch attribution for the critical-path analyzer: the
+        # dispatch interval of the unit that COMPLETED the op (its max
+        # end), plus the launch-wide source barrier it waited behind
+        op_meta: list[dict | None] = [None] * len(uops)
         if serial:
             # strict staging: no launch before ALL the window's transfers
             # (even direct-only fetches) complete; launches back-to-back
@@ -848,8 +1032,27 @@ class ObjectGateway:
             )
             if units:
                 total = sum(u.compute for u in units)
-                _, end = self._pool.dispatch(window_net, total)
+                start, end = self._pool.dispatch(
+                    window_net,
+                    total,
+                    ctx=(
+                        (tids[0], tids[0], {"kind": "serial", "launch_id": -1})
+                        if tracer.enabled
+                        else None
+                    ),
+                )
                 op_done = [end] * len(uops)
+                op_meta = [
+                    {
+                        "start": start,
+                        "end": end,
+                        "ready": window_net,
+                        "kind": "serial",
+                        "launch_id": -1,
+                        "fraction": 1.0,
+                        "tiles": 0,
+                    }
+                ] * len(uops)
         else:
             # pipelined: a PHYSICAL launch cannot start before every
             # source staged into it lands (its buffer holds all its
@@ -866,12 +1069,33 @@ class ObjectGateway:
                     launch_ready.get(u.launch_id, 0.0), r
                 )
             for u in sorted(units, key=lambda u: launch_ready[u.launch_id]):
-                _, end = self._pool.dispatch(
+                ctx = None
+                if tracer.enabled:
+                    # bill the engine-track span to the trace of the
+                    # earliest request owning this unit's first op (the
+                    # same owner the engine time is billed to)
+                    ctx = (
+                        tids[owners[u.op_indices[0]][0]],
+                        tids[owners[u.op_indices[0]][0]],
+                        {"kind": u.kind, "launch_id": u.launch_id},
+                    )
+                start, end = self._pool.dispatch(
                     launch_ready[u.launch_id], u.compute,
                     tenant=op_tenant[u.op_indices[0]],
+                    ctx=ctx,
                 )
                 for j in u.op_indices:
-                    op_done[j] = max(op_done[j], end)
+                    if end >= op_done[j]:
+                        op_done[j] = end
+                        op_meta[j] = {
+                            "start": start,
+                            "end": end,
+                            "ready": launch_ready[u.launch_id],
+                            "kind": u.kind,
+                            "launch_id": u.launch_id,
+                            "fraction": u.fraction,
+                            "tiles": u.tiles,
+                        }
 
         # 3) verify + deliver
         decoded_per_req: list[dict[int, np.ndarray]] = [dict() for _ in gets]
@@ -917,7 +1141,49 @@ class ObjectGateway:
                     ckey = (gid, row, col)
                     self.cache.put(ckey, blk, cost=costs.get(col, 1.0))
                     self._cache_ready[ckey] = col_done.get(col, done)
-            report.records.append(
+            if tracer.enabled:
+                tid = tids[i]
+                for op in plan.decodes:
+                    okey = (op.group_id, op.row, op.kind, op.targets, op.sources)
+                    j = unique_idx[okey]
+                    meta = op_meta[j]
+                    if meta is None:
+                        continue
+                    tracer.span(
+                        "decode",
+                        meta["start"],
+                        meta["end"],
+                        tid,
+                        tid,
+                        track=("tenant", req.tenant),
+                        op=j,
+                        shared=len(owners[j]),
+                        op_ready=max(ready[i][s] for s in op.sources),
+                        **{
+                            k: meta[k]
+                            for k in ("ready", "kind", "launch_id", "fraction", "tiles")
+                        },
+                    )
+                if self.config.verify:
+                    tracer.instant(
+                        "verify", done, tid, tid, track=("tenant", req.tenant)
+                    )
+                tracer.root_span(
+                    "request",
+                    req.time,
+                    done,
+                    tid,
+                    track=("tenant", req.tenant),
+                    object_id=req.object_id,
+                    kind="get",
+                    tenant=req.tenant,
+                    degraded=plan.degraded,
+                    bytes=bytes_read[i],
+                    cache_hits=cache_hits[i],
+                    fetch_at=fetch_ats[i],
+                )
+                tracer.end_trace(tid, latency=done - req.time)
+            report.add_record(
                 RequestRecord(
                     req.time,
                     req.object_id,
@@ -947,6 +1213,8 @@ class ObjectGateway:
             )
         gid, row = self._objects[oid]
         q = self._block_bytes
+        tracer = self.tracer
+        tid = tracer.begin_trace() if tracer.enabled else 0
         rng = np.random.default_rng((oid * 1_000_003 + int(req.time * 1e6)) % (2**63))
         new_data = rng.integers(0, 256, (self.code.k, q), dtype=np.uint8)
         new_row = np.asarray(self.code.horizontal.encode(new_data))  # (n, q)
@@ -979,6 +1247,7 @@ class ObjectGateway:
                         int(q),
                         req.time,
                         tenant=req.tenant,
+                        ctx=(tid, tid) if tracer.enabled else None,
                     )
                 )
                 done = max(done, end)
@@ -991,6 +1260,7 @@ class ObjectGateway:
                     int(q),
                     req.time,
                     tenant=req.tenant,
+                    ctx=(tid, tid) if tracer.enabled else None,
                 )
             )
             done = max(done, end)
@@ -1011,6 +1281,22 @@ class ObjectGateway:
             if self.store.available(par_key):
                 self._lost_at.pop(par_key, None)
         self._expected[oid] = new_data
+        if tracer.enabled:
+            tracer.root_span(
+                "request",
+                req.time,
+                done,
+                tid,
+                track=("tenant", req.tenant),
+                object_id=oid,
+                kind="put",
+                tenant=req.tenant,
+                degraded=False,
+                bytes=nbytes,
+                cache_hits=0,
+                fetch_at=req.time,
+            )
+            tracer.end_trace(tid, latency=done - req.time)
         return RequestRecord(
             req.time, oid, "put", done - req.time, False, nbytes, 0, 0,
             tenant=req.tenant,
@@ -1069,13 +1355,13 @@ class ObjectGateway:
         the trailing ``pacing_window``. None => idle (no recent traffic)."""
         slos = self.config.tenant_slo_p99 or {}
         since = at_time - self.config.pacing_window
+        # report.recent holds the trailing completed GETs (bounded deque)
+        # — the pacer's observation window no longer needs the unbounded
+        # per-request record list, so streaming mode paces identically
         lats = [
-            r.latency
-            for r in report.records
-            if r.latency is not None
-            and r.kind == "get"
-            and since <= r.time <= at_time
-            and (not slos or r.tenant in slos)
+            lat
+            for (t, tenant, lat) in report.recent
+            if since <= t <= at_time and (not slos or tenant in slos)
         ]
         if not lats:
             return None
@@ -1143,6 +1429,13 @@ class ObjectGateway:
         budget = self.config.repair_groups_per_run
         if budget is None:
             budget = len(pending)
+        tracer = self.tracer
+        rtid = 0
+        run_end = at_time
+        healed = 0
+        if tracer.enabled and pending:
+            rtid = tracer.begin_trace()
+            self.fixer.trace_ctx = (rtid, rtid)
         for gid, missing in pending[:budget]:
             if self._pacer is not None:
                 # closed loop: re-evaluate per group, so within one long
@@ -1168,6 +1461,17 @@ class ObjectGateway:
                 self.sim.set_tenant_weight(REPAIR_TENANT, share)
                 self._pool.set_weight(REPAIR_TENANT, share)
                 report.pacing.append((round(elapsed_anchor, 6), round(share, 4)))
+                if rtid:
+                    tracer.instant(
+                        "pacing",
+                        elapsed_anchor,
+                        rtid,
+                        rtid,
+                        track=("repair", "repair"),
+                        share=round(share, 4),
+                        observed_p99=observed,
+                        pressure=round(pressure, 6),
+                    )
             rep = self.fixer.fix_group(gid)
             report.repair_reports.append(rep)
             # repaired blocks stay invisible to reads until the repair's
@@ -1181,9 +1485,17 @@ class ObjectGateway:
                 # fetch -> decode -> write-back: the decode cannot start
                 # before the repair's fabric transfers deliver its inputs
                 _, eng_done = self._pool.dispatch(
-                    done, compute, tenant=REPAIR_TENANT
+                    done,
+                    compute,
+                    tenant=REPAIR_TENANT,
+                    ctx=(
+                        (rtid, rtid, {"kind": "repair.decode", "group": gid})
+                        if rtid
+                        else None
+                    ),
                 )
                 done = max(done, eng_done)
+            run_end = max(run_end, done)
             still_missing = []
             for key in missing:
                 if self.store.available(key):
@@ -1196,6 +1508,17 @@ class ObjectGateway:
                     t0 = self._lost_at.pop(key, None)
                     if t0 is not None:
                         report.mttr_samples.append(done - t0)
+                        healed += 1
+                        if rtid:
+                            tracer.instant(
+                                "repair.heal",
+                                done,
+                                rtid,
+                                rtid,
+                                track=("repair", "repair"),
+                                key=str(key),
+                                mttr=round(done - t0, 6),
+                            )
                 else:
                     still_missing.append(key)
             if still_missing:
@@ -1205,6 +1528,18 @@ class ObjectGateway:
                 self._repair_stuck[gid] = frozenset(still_missing)
             else:
                 self._repair_stuck.pop(gid, None)
+        if rtid:
+            tracer.root_span(
+                "repair.run",
+                at_time,
+                max(run_end, at_time),
+                rtid,
+                track=("repair", "repair"),
+                groups=min(budget, len(pending)),
+                healed=healed,
+            )
+            tracer.end_trace(rtid)
+            self.fixer.trace_ctx = None
         return len(pending) > budget
 
     # -- durability audit ---------------------------------------------------------

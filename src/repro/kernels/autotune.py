@@ -83,6 +83,17 @@ _CACHE: dict[tuple[str, bool], TunedKernel] = {}
 _cache_path_override: pathlib.Path | None = None
 _cache_path_set = False
 
+# Where tuned parameters came from, for first-class observability:
+# process-cache hits, disk-cache hits, and fresh sweeps run.
+_STATS = {"memory_hits": 0, "disk_hits": 0, "sweeps": 0}
+
+
+def cache_stats() -> dict[str, int]:
+    """Cumulative autotune cache accounting for this process: how many
+    ``_tuned`` lookups were served from the in-process cache, how many
+    from the persisted disk cache, and how many ran a fresh sweep."""
+    return dict(_STATS)
+
 
 def default_cache_path() -> pathlib.Path:
     return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
@@ -225,12 +236,16 @@ def _tuned(
     """Shared memoization spine: process cache -> disk cache -> sweep."""
     cached = _CACHE.get((kind, interpret))
     if cached is not None:
+        _STATS["memory_hits"] += 1
         return cached
     tuned = _load_persisted(kind, interpret, candidates)
     if tuned is None:
         bn, packed, dt = _best(sweep())
         tuned = TunedKernel(block_n=bn, packed=packed, elapsed=dt)
         _save_disk(kind, interpret, tuned)
+        _STATS["sweeps"] += 1
+    else:
+        _STATS["disk_hits"] += 1
     _CACHE[(kind, interpret)] = tuned
     return tuned
 

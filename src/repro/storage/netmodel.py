@@ -102,6 +102,11 @@ class Transfer:
     # simulator never drops a late transfer, it counts the miss per
     # tenant so SLO layers above can act on it.
     deadline: float | None = None
+    # Observability context: (trace_id, parent_span_id) of the request
+    # or repair that caused this transfer. When set (and the simulator
+    # carries a tracer), the transfer emits a fabric-track span into
+    # that trace. Appended last so positional construction is unchanged.
+    ctx: tuple | None = None
 
     @property
     def effective_tenant(self) -> object:
@@ -210,6 +215,13 @@ class NetSimulator:
     tenant_transfers: dict = field(default_factory=dict)
     tenant_deadline_missed: dict = field(default_factory=dict)
     tenant_deadline_met: dict = field(default_factory=dict)
+    # Optional span sink (repro.obs.Tracer): transfers whose ``ctx`` is
+    # set emit fabric-track spans into it. Observation-only — the
+    # schedule is byte-identical with or without a tracer attached.
+    tracer: object = None
+    # interned ("fabric", "portN") track tuples — xfer spans are the
+    # hottest emission site, one per transfer
+    _port_tracks: dict = field(default_factory=dict)
 
     def __post_init__(self):
         # weight 0 would mean "tenant paused" — this event model cannot
@@ -310,6 +322,31 @@ class NetSimulator:
             )
             counter = getattr(self, key)
             counter[tenant] = counter.get(tenant, 0) + 1
+        if (
+            t.ctx is not None
+            and self.tracer is not None
+            and getattr(self.tracer, "enabled", False)
+        ):
+            tid, pid = t.ctx
+            track = self._port_tracks.get(t.src_node)
+            if track is None:
+                track = self._port_tracks[t.src_node] = (
+                    "fabric",
+                    f"port{t.src_node}",
+                )
+            self.tracer.span(
+                "xfer",
+                first_start,
+                end,
+                tid,
+                pid,
+                track=track,
+                src=t.src_node,
+                dst=t.dst_node,
+                bytes=t.nbytes,
+                tenant=tenant,
+                wait=wait,
+            )
         return end
 
     def send_backlog(self, node: int, tenant, now: float) -> float:

@@ -152,10 +152,26 @@ class BlockFixer:
     # entries whose underlying block just became a cheap store read
     # again (cost-aware eviction, gateway/cache.py).
     on_block_repaired: "Callable[[tuple], None] | None" = None
+    # Observability (repro.obs): when the owner sets ``tracer`` and
+    # ``trace_ctx`` ((trace_id, parent_span_id)), repairs emit
+    # repair-track spans and their fabric transfers emit port spans
+    # into that trace. Observation-only.
+    tracer: object = None
+    trace_ctx: tuple | None = None
 
     def __post_init__(self):
         self.codec = CoreCodec(self.code)
         self._timed = 0.0
+
+    def _obs_ctx(self) -> tuple | None:
+        """(trace_id, parent_id) when span emission is live, else None."""
+        if (
+            self.tracer is not None
+            and getattr(self.tracer, "enabled", False)
+            and self.trace_ctx is not None
+        ):
+            return self.trace_ctx
+        return None
 
     def _sim(self) -> NetSimulator:
         sim = self.sim if self.sim is not None else NetSimulator(self.profile)
@@ -289,7 +305,33 @@ class BlockFixer:
         report.network_time = self._net_time(sim)
         report.compute_time = self._timed
         report.schedule = ";".join(descs)
+        self._emit_group_span(group_id, sim, report)
         return report
+
+    def _emit_group_span(
+        self, group_id: str, sim: NetSimulator, report: RepairReport
+    ) -> None:
+        ctx = self._obs_ctx()
+        if ctx is None or report.blocks_repaired == 0:
+            return
+        tid, pid = ctx
+        end = max(
+            sim.class_makespan.get(self.priority, self.not_before),
+            self.not_before,
+        )
+        self.tracer.span(
+            "repair.group",
+            self.not_before,
+            end,
+            tid,
+            pid,
+            track=("repair", "repair"),
+            group=group_id,
+            mode=report.mode,
+            blocks_repaired=report.blocks_repaired,
+            bytes_fetched=report.bytes_fetched,
+            recovered=report.recovered,
+        )
 
     def _execute_step(
         self,
@@ -303,6 +345,7 @@ class BlockFixer:
         blocks = np.stack([self.store.get((group_id, r, c)) for r, c in srcs])
         dst_cell = step.repairs[0]
         dst = self._dst_node(group_id, *dst_cell)
+        ctx = self._obs_ctx()
         ready = 0.0
         for r, c in srcs:
             src_node = self.store.node_of((group_id, r, c))
@@ -315,8 +358,20 @@ class BlockFixer:
                         blocks[0].nbytes,
                         max(block_ready.get((r, c), 0.0), self.not_before),
                         priority=self.priority,
+                        ctx=ctx,
                     )
                 ),
+            )
+        if ctx is not None:
+            self.tracer.span(
+                "repair.fetch",
+                self.not_before,
+                ready,
+                ctx[0],
+                ctx[1],
+                track=("repair", "repair"),
+                kind=step.kind,
+                blocks=len(srcs),
             )
         if step.kind == "V":
             rep = self._vertical_repair(blocks)[None]
@@ -333,7 +388,10 @@ class BlockFixer:
             if i > 0:
                 home = self.store.node_of((group_id, cell[0], cell[1]))
                 sim.transfer(
-                    Transfer(dst, home, rep[i].nbytes, ready, priority=self.priority)
+                    Transfer(
+                        dst, home, rep[i].nbytes, ready,
+                        priority=self.priority, ctx=ctx,
+                    )
                 )
         report.blocks_fetched += len(srcs)
         report.bytes_fetched += int(blocks.nbytes)

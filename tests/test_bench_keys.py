@@ -5,11 +5,12 @@ The ROADMAP's standing rule is that these keys are STABLE: extended,
 never renamed, so the perf trajectory stays comparable across PRs. This
 test pins the key set from PR 2 (throughput / latency / amplification /
 pipelined-vs-serial / p99-under-repair), the PR 3 multi-tenant block
-(gateway_tenants), and the PR 4 fault-scenario block (gateway_scenario:
-paced-vs-fixed repair p99/MTTR plus durability counters), and skips
-cleanly when the snapshot has not been
-generated in this checkout (e.g. a fresh clone running only the unit
-suite).
+(gateway_tenants), the PR 4 fault-scenario block (gateway_scenario:
+paced-vs-fixed repair p99/MTTR plus durability counters), the PR 5
+megakernel block, and the PR 6 observability block (gateway_obs:
+tracing overhead + stage attribution + bounded long-trace), and skips
+cleanly when the snapshot has not been generated in this checkout
+(e.g. a fresh clone running only the unit suite).
 """
 
 from __future__ import annotations
@@ -37,6 +38,7 @@ TOP_LEVEL_KEYS = {
     "gateway_tenants",
     "gateway_scenario",
     "gateway_megakernel",
+    "gateway_obs",
 }
 
 PIPELINE_KEYS = {
@@ -78,6 +80,30 @@ MEGAKERNEL_KEYS = {
     "speedup",
     "jit_entries",
     "decode_shapes",
+}
+
+# PR-6 observability block: tracing overhead + critical-path stage
+# attribution on the canonical scenario, plus the bounded-memory
+# long-trace run.
+OBS_KEYS = {
+    "overhead_ratio",
+    "stage_shares",
+    "shares_sum",
+    "traces_kept",
+    "spans",
+    "launch_amortization",
+    "jit_retraces",
+    "autotune_sweeps",
+    "long_trace",
+}
+
+OBS_STAGES = {
+    "admission",
+    "fetch",
+    "batch_wait",
+    "engine_wait",
+    "decode",
+    "deliver",
 }
 
 
@@ -154,6 +180,38 @@ def test_gateway_scenario_values_sane(bench):
     assert sc["durability_events"] > 0
     assert sc["mttr_s"]["fixed"] > 0 and sc["mttr_s"]["paced"] > 0
     assert sc["pacing_updates"] > 0
+
+
+def test_gateway_obs_keys(bench):
+    obs = bench["gateway_obs"]
+    missing = OBS_KEYS - set(obs)
+    assert not missing, f"gateway_obs lost stable keys: {sorted(missing)}"
+    assert OBS_STAGES <= set(obs["stage_shares"])
+    assert {"launches", "ops_per_launch", "tiles_per_launch"} <= set(
+        obs["launch_amortization"]
+    )
+    assert {
+        "requests",
+        "records_resident",
+        "resident_samples",
+        "spans_resident",
+        "traces_kept",
+    } <= set(obs["long_trace"])
+
+
+def test_gateway_obs_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): the tracer plane costs a few
+    percent at most, the additive critical-path shares cover the whole
+    latency, and the long-trace run kept resident state bounded."""
+    obs = bench["gateway_obs"]
+    assert 1.0 <= obs["overhead_ratio"] <= 1.05
+    assert obs["shares_sum"] == pytest.approx(1.0, abs=0.01)
+    assert obs["traces_kept"] > 0 and obs["spans"] > 0
+    lt = obs["long_trace"]
+    assert lt["requests"] >= 2000
+    assert lt["records_resident"] == 0
+    assert lt["resident_samples"] < 50_000
 
 
 def test_gateway_tenants_values_sane(bench):

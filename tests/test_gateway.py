@@ -592,9 +592,13 @@ def test_gateway_admission_reject_cuts_slo_violations():
     slo = 0.05
     rates = {}
     for admission in ("off", "reject", "degrade"):
+        # modeled decode billing: the backlog this test needs must not
+        # depend on how fast the host happens to run the real kernels —
+        # payload bytes still come from the real decode path (verify)
         cfg_kw = dict(
             batch_window=0.003,
             admission=admission,
+            decode_cost=0.01,
             tenant_slo_p99={"foreground": slo},
         )
         gw = ObjectGateway(

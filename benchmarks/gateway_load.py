@@ -22,7 +22,12 @@ ladder baseline — gating throughput, live jit signatures per kind, and
 padding. Finally the fault-injection scenario rows (gateway_scenario):
 a correlated rack failure under a load surge served with SLO-paced vs
 fixed full-weight repair (p99-under-failure, MTTR, durability), and a
-seeded random within-tolerance trace as the durability smoke.
+seeded random within-tolerance trace as the durability smoke. The
+gray-failure rows (gateway_integrity): hedged vs unhedged degraded
+reads against a fail-slow node (p99 + the structural extra-byte budget)
+and a corruption + fail-slow scenario exercising the corruption-as-
+erasure plane (read/scrub detection, MTTD, repair heal, zero wrong
+bytes served).
 
 Results land in BENCH_gateway.json (stable keys) so the perf trajectory
 is tracked across PRs — benchmarks/run.py writes it on every --fast run.
@@ -46,6 +51,7 @@ from repro.gateway import (
     tenant_slo_map,
     tenant_weight_map,
 )
+from repro.gateway.workload import SlowNodeEvent
 from repro.kernels import autotune
 from repro.scenario import (
     ScenarioConfig,
@@ -243,6 +249,7 @@ def run(fast: bool = True) -> list[dict]:
     rows.extend(_run_tenant_rows(code, num_nodes, fast))
     rows.extend(_run_scenario_rows(code, num_nodes, fast))
     rows.extend(_run_obs_rows(code, fast))
+    rows.extend(_run_integrity_rows(fast))
     return rows
 
 
@@ -693,6 +700,146 @@ def _run_tenant_rows(code, num_nodes, fast: bool) -> list[dict]:
     return rows
 
 
+def _run_integrity_rows(fast: bool) -> list[dict]:
+    """Gray-failure integrity rows (bench="gateway_integrity"): hedged
+    vs unhedged degraded reads racing a fail-slow node, and a corruption
+    + fail-slow scenario exercising the corruption-as-erasure plane
+    (read + scrub detection, MTTD, repair heal, zero wrong bytes).
+
+    These rows gate POLICY dynamics — hedge deadlines, the structural
+    extra-byte budget, digest verification — not kernel throughput, so
+    they pin the small code shape and modeled decode billing in both
+    modes for bit-for-bit replayability. The fail-slow pair uses a
+    sparse cluster (120 nodes, 30 uniform-popularity objects) so one
+    slow node touches ~10% of GETs: the regime where a 5% speculative
+    byte budget covers the tail instead of structurally starving it.
+    """
+    code = CoreCode(9, 6, 3)
+    num_nodes, q, num_objects = 120, 4096, 30
+    num_requests = 300 if fast else 600
+    rows = []
+
+    wl = WorkloadConfig(
+        num_objects=num_objects,
+        num_requests=num_requests,
+        arrival_rate=200.0,
+        zipf_s=0.0,  # uniform: the slow-hit fraction is structural
+        seed=53,
+    )
+    reqs = generate_requests(wl)
+    for scen, hedge in (("unhedged", False), ("hedged", True)):
+        gw = _mk_gateway(
+            code, num_nodes, q, num_objects, seed=53,
+            batch_window=0.005, decode_cost=0.0005, hedge=hedge,
+        )
+        # degrade a node hosting object 0's first data column: placement
+        # is seed-deterministic, so both runs race the same slow node
+        slow = gw.store.node_of((*gw._objects[0], 0))
+        rep = gw.serve(reqs, [SlowNodeEvent(time=0.0, node=slow, rate_factor=0.05)])
+        m = rep.metrics
+        primary = sum(gw._fetch_bytes.values())
+        gets_done = sum(1 for r in rep.completed if r.kind == "get")
+        rows.append(
+            {
+                "bench": "gateway_integrity",
+                "scenario": scen,
+                "requests": len(rep.records),
+                "completed": len(rep.completed),
+                "p50_ms": round(rep.latency_percentile(50) * 1e3, 3),
+                "p99_ms": round(rep.latency_percentile(99) * 1e3, 3),
+                "hedge_launched": int(m.counter_total("hedge_launched")),
+                "hedge_wins": int(m.counter_total("hedge_wins")),
+                "hedge_losses": int(m.counter_total("hedge_losses")),
+                "hedge_budget_denied": int(
+                    m.counter_total("hedge_budget_denied")
+                ),
+                "extra_fabric_ratio": round(
+                    m.counter_total("hedge_bytes") / max(primary, 1), 4
+                ),
+                "wrong_bytes_served": gets_done
+                - int(m.counter_total("verified_gets")),
+            }
+        )
+
+    # corruption + fail-slow + crashes, bounded at the code's tolerance:
+    # silent bitflips surface through fetch verifies (read) and the
+    # background scrubber (latent blocks nobody fetches), every
+    # detection is reclassified as an erasure and repaired, and every
+    # GET still returns verified bytes
+    scfg = ScenarioConfig(
+        duration=0.6,
+        num_nodes=60,
+        nodes_per_rack=3,
+        max_concurrent_failures=code.n - code.k,
+        crash_rate=4.0,
+        mean_downtime=0.08,
+        transient_fraction=0.5,
+        corruption_rate=10.0,
+        corruption_blocks=2,
+        slow_rate=5.0,
+        slow_factor=0.2,
+        mean_slow_time=0.1,
+        seed=47,
+    )
+    trace = generate_scenario(scfg)
+    gw = _mk_gateway(
+        code, 60, q, num_objects, seed=47,
+        batch_window=0.01,
+        cache_bytes=8 * q,
+        repair_on_failure=True,
+        repair_delay=0.03,
+        # scrub paced so the READ path wins some detection races too —
+        # both detectors must show up in the gate
+        scrub_interval=0.1,
+        scrub_blocks_per_run=48,
+        decode_cost=0.002,
+    )
+    res = run_scenario(
+        gw,
+        trace,
+        WorkloadConfig(
+            num_objects=num_objects,
+            num_requests=num_requests,
+            arrival_rate=400.0,
+            seed=47,
+        ),
+    )
+    rep = res.report
+    m = rep.metrics
+    mttd = list(rep.corruption_latency)
+    # silently-corrupt blocks the run never caught (injected after the
+    # last scrub tick): still byte-damaged at drain, honestly reported
+    undetected = sum(1 for k in gw.store.blocks if not gw.store.verify(k))
+    gets_done = sum(1 for r in rep.completed if r.kind == "get")
+    rows.append(
+        {
+            "bench": "gateway_integrity",
+            "scenario": "graybox",
+            "requests": len(rep.records),
+            "completed": len(rep.completed),
+            "degraded_gets": len(rep.degraded_gets),
+            "p99_ms": round(rep.latency_percentile(99) * 1e3, 3),
+            "blocks_corrupted": int(m.counter_total("blocks_corrupted")),
+            "corruption_detected": int(m.counter_total("corruption_detected")),
+            "detected_by_read": int(
+                m.counter_total("corruption_detected", source="read")
+            ),
+            "detected_by_scrub": int(
+                m.counter_total("corruption_detected", source="scrub")
+            ),
+            "slow_events": int(m.counter_total("slow_events")),
+            "mttd_mean_s": round(float(np.mean(mttd)), 4) if mttd else 0.0,
+            "mttd_max_s": round(float(np.max(mttd)), 4) if mttd else 0.0,
+            "corrupt_undetected_end": undetected,
+            "blocks_lost": res.blocks_lost,
+            "missing_blocks_end": int(res.durability["missing_blocks"]),
+            "wrong_bytes_served": gets_done
+            - int(m.counter_total("verified_gets")),
+        }
+    )
+    return rows
+
+
 def bench_summary(rows: list[dict]) -> dict:
     """Machine-readable perf snapshot with stable keys (BENCH_gateway.json)."""
     main = {r["failed_nodes"]: r for r in rows if r["bench"] == "gateway_load"}
@@ -736,6 +883,7 @@ def bench_summary(rows: list[dict]) -> dict:
         "gateway_tenants": _tenant_summary(rows),
         "gateway_scenario": _scenario_summary(rows),
         "gateway_obs": _obs_summary(rows),
+        "gateway_integrity": _integrity_summary(rows),
         "jit_cache_entries": max(r.get("jit_entries", 0) for r in rows),
         # winners only — raw sweep timings are measurement noise and
         # would churn this committed file on every run
@@ -872,6 +1020,37 @@ def _obs_summary(rows: list[dict]) -> dict:
             "spans_resident": lt["spans_resident"],
             "traces_kept": lt["traces_kept"],
         },
+    }
+
+
+def _integrity_summary(rows: list[dict]) -> dict:
+    """The gateway_integrity block of BENCH_gateway.json (stable keys):
+    hedged-vs-unhedged p99 under fail-slow with the structural
+    extra-byte ratio, plus the corruption plane's detection/repair
+    counters and MTTD from the graybox scenario."""
+    it = {r["scenario"]: r for r in rows if r["bench"] == "gateway_integrity"}
+    un, he, gb = it["unhedged"], it["hedged"], it["graybox"]
+    return {
+        "p99_fail_slow_ms": {
+            "unhedged": un["p99_ms"],
+            "hedged": he["p99_ms"],
+            "improvement": round(un["p99_ms"] / max(he["p99_ms"], 1e-9), 3),
+        },
+        "hedge_launched": he["hedge_launched"],
+        "hedge_wins": he["hedge_wins"],
+        "hedge_losses": he["hedge_losses"],
+        "extra_fabric_ratio": he["extra_fabric_ratio"],
+        "corruption_injected": gb["blocks_corrupted"],
+        "corruption_detected": gb["corruption_detected"],
+        "detected_by_read": gb["detected_by_read"],
+        "detected_by_scrub": gb["detected_by_scrub"],
+        "mttd_s": gb["mttd_mean_s"],
+        "corrupt_blocks_repaired": max(
+            0, gb["corruption_detected"] - gb["missing_blocks_end"]
+        ),
+        "wrong_bytes_served": un["wrong_bytes_served"]
+        + he["wrong_bytes_served"]
+        + gb["wrong_bytes_served"],
     }
 
 
@@ -1086,6 +1265,36 @@ def check(rows: list[dict]) -> list[str]:
         f"resident memory ({lt['resident_samples']} samples, "
         f"{lt['spans_resident']} spans, 0 raw records) "
         f"({'PASS' if lt_ok else 'FAIL'})"
+    )
+    # hedged degraded reads: cut fail-slow p99 inside the 5% byte budget
+    integ = _integrity_summary(rows)
+    p99h = integ["p99_fail_slow_ms"]
+    hedge_ok = (
+        p99h["hedged"] < p99h["unhedged"]
+        and integ["hedge_wins"] > 0
+        and integ["extra_fabric_ratio"] <= 0.05
+    )
+    msgs.append(
+        f"gateway: hedged reads cut fail-slow p99 within the 5% byte "
+        f"budget ({p99h['unhedged']:.1f} -> {p99h['hedged']:.1f} ms, "
+        f"{integ['hedge_wins']} wins, {integ['extra_fabric_ratio']:.1%} "
+        f"extra bytes) ({'PASS' if hedge_ok else 'FAIL'})"
+    )
+    # corruption-as-erasure: both detectors fire, every detection is
+    # repaired, and no GET ever returned unverified bytes
+    integ_ok = (
+        integ["detected_by_read"] > 0
+        and integ["detected_by_scrub"] > 0
+        and integ["corrupt_blocks_repaired"] == integ["corruption_detected"]
+        and integ["wrong_bytes_served"] == 0
+    )
+    msgs.append(
+        f"gateway: corruption detected and repaired "
+        f"({integ['detected_by_read']} by read + "
+        f"{integ['detected_by_scrub']} by scrub of "
+        f"{integ['corruption_injected']} injected, MTTD "
+        f"{integ['mttd_s'] * 1e3:.0f} ms), 0 wrong bytes served "
+        f"({'PASS' if integ_ok else 'FAIL'})"
     )
     return msgs
 

@@ -34,6 +34,21 @@ fixed full-weight repair and with pacing, and prints p99-under-failure,
 MTTR, the pacer's share decisions, negative-cache activity, and the
 final durability audit.
 
+Gray-failure hardening (--graybox): the failures real clusters fear
+most are the ones that don't announce themselves — silent bit rot and
+fail-slow nodes. The demo runs two experiments. First, a fail-slow
+race: one node serving a twentieth of its healthy bandwidth, replayed
+without and with hedged degraded reads (a speculative reconstruction
+launched when a fetch overshoots the deadline priced off the request's
+LEAST-backlogged source — the cross-source differential is the gray
+signal), under a per-tenant 5% speculative-byte budget. Second, a
+corruption + fail-slow + crash scenario bounded at the code's
+tolerance: silent bitflips are caught by fetch-time checksum verifies
+(read path) and the paced background scrubber, reclassified as
+erasures (quarantine + tombstone + repair), and every GET still
+returns digest-verified bytes — the demo prints detection split, MTTD,
+hedge accounting, and the wrong-bytes-served count (always 0).
+
 Sim-time tracing (--trace out.json): the same serve with the
 observability plane on — every request becomes a trace of spans over
 the SIMULATED clock, exported as chrome-tracing JSON that opens
@@ -71,6 +86,7 @@ stage shares the gateway_obs benchmark reports.
     PYTHONPATH=src python examples/gateway_serving.py
     PYTHONPATH=src python examples/gateway_serving.py --tenants
     PYTHONPATH=src python examples/gateway_serving.py --scenario
+    PYTHONPATH=src python examples/gateway_serving.py --graybox
     PYTHONPATH=src python examples/gateway_serving.py --trace out.json
 """
 
@@ -82,6 +98,7 @@ from repro.core.product_code import CoreCode
 from repro.gateway import (
     GatewayConfig,
     ObjectGateway,
+    SlowNodeEvent,
     TenantProfile,
     WorkloadConfig,
     generate_requests,
@@ -91,8 +108,10 @@ from repro.gateway import (
     tenant_weight_map,
 )
 from repro.scenario import (
+    ScenarioConfig,
     correlated_surge_setup,
     flapping_node,
+    generate_scenario,
     run_scenario,
 )
 from repro.storage.netmodel import REPAIR_TENANT, ClusterProfile
@@ -263,17 +282,146 @@ def main_scenario():
               f"{audit['missing_blocks']} still missing")
 
 
+def main_graybox():
+    """Gray-failure demo: hedged degraded reads racing a fail-slow node,
+    then a corruption + fail-slow + crash scenario exercising the
+    corruption-as-erasure integrity plane end to end (the same two
+    setups the gateway_integrity benchmark rows gate)."""
+    code = CoreCode(9, 6, 3)
+    q, num_objects = 4096, 30
+
+    # --- experiment 1: fail-slow node, unhedged vs hedged -------------
+    # A sparse cluster with uniform popularity keeps the slow-hit
+    # fraction structural (~10% of GETs touch the slow node), the regime
+    # a 5% speculative byte budget is meant to cover.
+    num_nodes = 120
+    wl = WorkloadConfig(
+        num_objects=num_objects,
+        num_requests=300,
+        arrival_rate=200.0,
+        zipf_s=0.0,
+        seed=53,
+    )
+    reqs = generate_requests(wl)
+    print(f"CORE ({code.n},{code.k},{code.t}) cluster, {num_nodes} nodes; "
+          f"one node fail-slow at 5% of healthy bandwidth from t=0")
+    for label, hedge in (("unhedged", False), ("hedged", True)):
+        cfg = GatewayConfig(
+            batch_window=0.005, decode_cost=0.0005, hedge=hedge,
+        )
+        gw = ObjectGateway(
+            code, ClusterProfile.network_critical(), num_nodes, cfg
+        )
+        rng = np.random.default_rng(53)
+        gw.load_objects(
+            rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8)
+        )
+        # degrade a node hosting object 0's first data column (placement
+        # is seed-deterministic: both runs race the same slow node)
+        slow = gw.store.node_of((*gw._objects[0], 0))
+        rep = gw.serve(
+            reqs, [SlowNodeEvent(time=0.0, node=slow, rate_factor=0.05)]
+        )
+        m = rep.metrics
+        print(f"\n  {label}:")
+        print(f"    latency p50/p99 {rep.latency_percentile(50)*1e3:8.2f} / "
+              f"{rep.latency_percentile(99)*1e3:.2f} ms")
+        if hedge:
+            extra = m.counter_total("hedge_bytes") / max(
+                sum(gw._fetch_bytes.values()), 1
+            )
+            print(f"    hedges          {int(m.counter_total('hedge_launched')):8d}"
+                  f" launched, {int(m.counter_total('hedge_wins'))} won, "
+                  f"{int(m.counter_total('hedge_losses'))} lost, "
+                  f"{int(m.counter_total('hedge_budget_denied'))} budget-denied")
+            print(f"    extra fabric    {extra:8.1%} speculative bytes "
+                  f"(budget {cfg.hedge_budget:.0%})")
+
+    # --- experiment 2: corruption-as-erasure under a gray trace -------
+    scfg = ScenarioConfig(
+        duration=0.6,
+        num_nodes=60,
+        nodes_per_rack=3,
+        max_concurrent_failures=code.n - code.k,
+        crash_rate=4.0,
+        mean_downtime=0.08,
+        transient_fraction=0.5,
+        corruption_rate=10.0,
+        corruption_blocks=2,
+        slow_rate=5.0,
+        slow_factor=0.2,
+        mean_slow_time=0.1,
+        seed=47,
+    )
+    trace = generate_scenario(scfg)
+    cfg = GatewayConfig(
+        batch_window=0.01,
+        cache_bytes=8 * q,
+        repair_on_failure=True,
+        repair_delay=0.03,
+        scrub_interval=0.1,
+        scrub_blocks_per_run=48,
+        decode_cost=0.002,
+    )
+    gw = ObjectGateway(code, ClusterProfile.network_critical(), 60, cfg)
+    rng = np.random.default_rng(47)
+    gw.load_objects(
+        rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8)
+    )
+    print(f"\ngray trace: {len(trace.fault_events())} fault events over "
+          f"{scfg.duration:.1f}s — silent bitflips + fail-slow nodes + "
+          f"transient crashes, bounded at n-k={code.n - code.k}")
+    res = run_scenario(
+        gw,
+        trace,
+        WorkloadConfig(
+            num_objects=num_objects,
+            num_requests=300,
+            arrival_rate=400.0,
+            seed=47,
+        ),
+    )
+    rep = res.report
+    m = rep.metrics
+    mttd = list(rep.corruption_latency)
+    gets_done = sum(1 for r in rep.completed if r.kind == "get")
+    wrong = gets_done - int(m.counter_total("verified_gets"))
+    print(f"\n  corruption      {int(m.counter_total('blocks_corrupted')):8d}"
+          f" blocks silently damaged, "
+          f"{int(m.counter_total('corruption_detected'))} detected "
+          f"({int(m.counter_total('corruption_detected', source='read'))} by "
+          f"fetch verify, "
+          f"{int(m.counter_total('corruption_detected', source='scrub'))} by "
+          f"scrub)")
+    if mttd:
+        print(f"    MTTD mean/max {np.mean(mttd)*1e3:8.1f} / "
+              f"{np.max(mttd)*1e3:.1f} ms (injection -> checksum detection)")
+    print(f"    fail-slow       {int(m.counter_total('slow_events')):8d}"
+          f" rate-change events applied to the fabric")
+    print(f"    degraded GETs   {len(rep.degraded_gets):8d} of {gets_done} "
+          f"(every payload digest-verified; {wrong} wrong bytes served)")
+    audit = res.durability
+    print(f"    durability      {res.blocks_lost:8d} blocks lost, "
+          f"{audit['unreadable_objects']} unreadable, "
+          f"{audit['missing_blocks']} still missing after repair")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tenants", action="store_true",
                     help="two-tenant QoS demo (weights + SLO admission)")
     ap.add_argument("--scenario", action="store_true",
                     help="fault-injection demo (paced vs fixed repair)")
+    ap.add_argument("--graybox", action="store_true",
+                    help="gray-failure demo (corruption-as-erasure, "
+                         "fail-slow injection, hedged degraded reads)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="run the default demo with sim-time tracing and "
                          "export a Perfetto/chrome-tracing JSON file")
     args = ap.parse_args()
-    if args.scenario:
+    if args.graybox:
+        main_graybox()
+    elif args.scenario:
         main_scenario()
     elif args.tenants:
         main_tenants()

@@ -38,7 +38,18 @@
 # negative-cached with a TTL (GatewayConfig.negative_ttl) so planning
 # skips re-probing known failures; MTTR is sampled per healed block
 # (GatewayReport.mttr_samples / restored_samples) and
-# audit_durability() reports provable data loss. repair_pacing=True
+# audit_durability() reports provable data loss. Gray failures ride the
+# same event stream: CorruptionEvent flips bits in place (silent until a
+# digest check catches it), SlowNode/SlowNicEvent degrade a node's
+# effective link rate. The integrity plane (verify_checksums, default
+# on) checks every store fetch and decode output against the crc32
+# digest recorded at PUT, reclassifies mismatches as erasures (replan ->
+# CORE parity first, RS fallback; corrupt replica quarantined,
+# tombstoned, queued for repair), and a paced background scrubber
+# (scrub_interval) bounds detection latency for data no read touches.
+# hedge=True races direct fetches stuck past a healthy-fabric deadline
+# against the cheapest alternate reconstruction, under a per-tenant
+# speculative-byte budget (hedge_budget). repair_pacing=True
 # closes the SLO loop: a PacingController (storage/repair.py) maps
 # observed foreground p99 headroom against tenant_slo_p99 — plus MTTR
 # urgency as a repair drags — to the "repair" tenant's fabric weight
@@ -65,10 +76,13 @@ from repro.gateway.planner import (
 )
 from repro.gateway.workload import (
     CapacityLossEvent,
+    CorruptionEvent,
     DEFAULT_TENANT,
     FailureEvent,
     NodeRecoverEvent,
     Request,
+    SlowNicEvent,
+    SlowNodeEvent,
     TenantProfile,
     WorkloadConfig,
     generate_requests,
@@ -87,6 +101,9 @@ __all__ = [
     "tenant_weight_map",
     "CacheStats",
     "CapacityLossEvent",
+    "CorruptionEvent",
+    "SlowNicEvent",
+    "SlowNodeEvent",
     "EnginePool",
     "LRUBlockCache",
     "NodeRecoverEvent",

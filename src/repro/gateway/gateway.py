@@ -103,6 +103,7 @@ ways.
 from __future__ import annotations
 
 import hashlib
+import zlib
 from collections import deque
 from dataclasses import dataclass, field, replace
 
@@ -120,10 +121,13 @@ from repro.gateway.planner import (
 )
 from repro.gateway.workload import (
     CapacityLossEvent,
+    CorruptionEvent,
     DEFAULT_TENANT,
     FailureEvent,
     NodeRecoverEvent,
     Request,
+    SlowNicEvent,
+    SlowNodeEvent,
 )
 from repro.kernels import autotune
 from repro.obs.metrics import BoundedLog, BoundedSamples, MetricsRegistry
@@ -137,7 +141,7 @@ from repro.storage.netmodel import (
     PortTimeline,
     Transfer,
 )
-from repro.storage.repair import BlockFixer, PacingController
+from repro.storage.repair import BlockFixer, PacingController, Scrubber
 
 PIPELINED = "pipelined"
 SERIAL = "serial"
@@ -205,6 +209,33 @@ class GatewayConfig:
     # cannot close inside one atomic repair event.
     repair_groups_per_run: int | None = None
     repair_respacing: float = 0.05
+    # -- integrity / gray-failure hardening -----------------------------------
+    # Verify every store fetch's crc32 digest (and every decode output
+    # against its target's reference digest). A mismatch is reclassified
+    # as an ERASURE: quarantine + negative-cache tombstone + replan as a
+    # degraded read + repair queue. Zero simulated cost (checksumming is
+    # local disk-speed work on each node), so enabling it on a clean
+    # cluster changes no timings.
+    verify_checksums: bool = True
+    # Hedged fetches: when a direct data-block fetch is going to land
+    # later than hedge_threshold x its healthy-fabric estimate (fair-
+    # share serialization + the tenant's own committed backlog), launch
+    # the cheapest single-block recovery plan (CORE vertical XOR first,
+    # RS row fallback) speculatively and take the first verified winner.
+    hedge: bool = False
+    hedge_threshold: float = 2.0
+    hedge_max_retries: int = 2  # speculative attempts per request
+    hedge_backoff: float = 2.0  # deadline multiplier per extra attempt
+    # Per-tenant hedge-byte budget: cumulative speculative fabric bytes
+    # may not exceed this fraction of the tenant's primary fetch bytes —
+    # the structural cap that keeps hedging from stampeding the fabric.
+    hedge_budget: float = 0.05
+    # Background scrubber: every scrub_interval simulated seconds, verify
+    # up to scrub_blocks_per_run stored blocks (paced down by the repair
+    # PacingController when foreground SLOs are at risk) so latent
+    # corruption is found before reads trip over it. None disables.
+    scrub_interval: float | None = None
+    scrub_blocks_per_run: int = 64
     # -- observability (repro.obs) --------------------------------------------
     tracing: bool = False  # emit sim-time spans into a bounded Tracer
     # sampling policy: "always" | "head:N" | "tail:SECONDS" | comma-combos
@@ -267,6 +298,9 @@ class GatewayReport:
     # time from block loss to availability restoration via a
     # NodeRecoverEvent (transient failure over — no repair bytes moved)
     restored_samples: BoundedSamples = field(default_factory=BoundedSamples)
+    # time from silent-corruption injection to checksum detection (fetch
+    # verify or scrub), one sample per corrupt block detected
+    corruption_latency: BoundedSamples = field(default_factory=BoundedSamples)
     # closed-loop repair pacing decisions: (simulated time, share)
     pacing: BoundedLog = field(default_factory=BoundedLog)
     # streaming metrics registry: labeled counters / gauges / histograms
@@ -310,6 +344,7 @@ class GatewayReport:
             + len(self.recent)
             + self.mttr_samples.resident()
             + self.restored_samples.resident()
+            + self.corruption_latency.resident()
             + self.pacing.resident()
             + self.metrics.resident_samples()
         )
@@ -552,6 +587,38 @@ class ObjectGateway:
                 f"repair_groups_per_run must be >= 1 or None, got "
                 f"{self.config.repair_groups_per_run}"
             )
+        if self.config.hedge_threshold <= 0:
+            raise ValueError(
+                f"hedge_threshold must be positive, got "
+                f"{self.config.hedge_threshold}"
+            )
+        if self.config.hedge_max_retries < 0:
+            raise ValueError(
+                f"hedge_max_retries must be >= 0, got "
+                f"{self.config.hedge_max_retries}"
+            )
+        if self.config.hedge_backoff < 1.0:
+            raise ValueError(
+                f"hedge_backoff must be >= 1 (deadlines may not shrink "
+                f"across retries), got {self.config.hedge_backoff}"
+            )
+        if self.config.hedge_budget <= 0:
+            raise ValueError(
+                f"hedge_budget must be positive, got {self.config.hedge_budget}"
+            )
+        if (
+            self.config.scrub_interval is not None
+            and self.config.scrub_interval <= 0
+        ):
+            raise ValueError(
+                f"scrub_interval must be positive or None, got "
+                f"{self.config.scrub_interval}"
+            )
+        if self.config.scrub_blocks_per_run < 1:
+            raise ValueError(
+                f"scrub_blocks_per_run must be >= 1, got "
+                f"{self.config.scrub_blocks_per_run}"
+            )
         if self.config.pipeline == SERIAL and self.config.num_engines != 1:
             # the serial baseline prices the PR-1 synchronous loop, which
             # had exactly one decode engine — extra engines would sit
@@ -653,6 +720,25 @@ class ObjectGateway:
         slos = self.config.tenant_slo_p99 or {}
         # the tier the pacer protects: the tightest declared SLO
         self._pacing_slo = min(slos.values()) if slos else None
+        # -- integrity plane state ---------------------------------------------
+        # background scrubber over the store (paced via the same
+        # PacingController share repair uses)
+        self._scrubber = Scrubber(
+            self.store, blocks_per_run=self.config.scrub_blocks_per_run
+        )
+        self._scrub_next: float | None = self.config.scrub_interval
+        # when each still-undetected silent corruption was injected —
+        # omniscient metrics-only bookkeeping (detection latency); the
+        # serving path itself only ever learns of corruption via verify
+        self._corrupted_at: dict[BlockKey, float] = {}
+        # per-tenant hedge budget ledger: cumulative speculative fabric
+        # bytes vs cumulative primary fetch bytes (the <= hedge_budget
+        # structural cap), persisted across windows and serve() calls
+        self._hedge_bytes: dict = {}
+        self._fetch_bytes: dict = {}
+        # pending detection-triggered / event-triggered repairs:
+        # (due time, node | -1 continuation | -2 corruption detection)
+        self._repair_queue: list[tuple[float, int]] = []
 
     # -- availability: store OR cache, gated on repair completion --------------
     def _available(self, key: BlockKey) -> bool:
@@ -682,6 +768,16 @@ class ObjectGateway:
         # to that simulated moment.
         if self.cache is not None:
             self._reprice_on_heal.add(key)
+            # the tombstone dies with the repair WRITE, not with the
+            # node-down condition that keyed it: a corrupt-then-repaired
+            # block never crashed a node, so without this purge its
+            # negative entry would outlive the repair and shadow the
+            # healthy store copy until TTL expiry (the _healing gate
+            # keeps it invisible until the write-back lands regardless)
+            self.cache.purge_negative([key])
+        # the rewrite replaces the bytes, so any still-undetected silent
+        # damage is gone with them
+        self._corrupted_at.pop(key, None)
 
     def _apply_heal_reprice(self, key: BlockKey) -> None:
         if self.cache is not None:
@@ -732,20 +828,27 @@ class ObjectGateway:
         cfg = self.config
         events = sorted(failures or [], key=lambda f: f.time)
         reqs = sorted(requests, key=lambda r: r.time)
-        repair_queue: list[tuple[float, int]] = []  # (time, node)
+        # (time, node) — on self so detection paths (_note_corrupt, fired
+        # from fetch verify and scrub mid-window) can queue repairs too
+        repair_queue = self._repair_queue
 
         fi = 0
         batch: list[Request] = []
         batch_deadline = None
 
         def boundary_events(now: float | None):
-            """Apply cluster / repair events due before ``now`` (None =>
-            all remaining), flushing the open batch first."""
+            """Apply cluster / repair / scrub events due before ``now``
+            (None => all remaining; scrub ticks stop with the request
+            stream — a final drain must not scrub forever), flushing the
+            open batch first."""
             nonlocal fi, batch, batch_deadline
             while True:
                 next_evt = events[fi].time if fi < len(events) else None
                 next_rep = repair_queue[0][0] if repair_queue else None
-                cands = [t for t in (next_evt, next_rep) if t is not None]
+                next_scrub = self._scrub_next if now is not None else None
+                cands = [
+                    t for t in (next_evt, next_rep, next_scrub) if t is not None
+                ]
                 if not cands:
                     return
                 t_evt = min(cands)
@@ -761,7 +864,7 @@ class ObjectGateway:
                     if wants_repair and cfg.repair_on_failure:
                         repair_queue.append((evt.time + cfg.repair_delay, evt.node))
                         repair_queue.sort()
-                else:
+                elif next_rep is not None and t_evt == next_rep:
                     t_rep, _node = repair_queue.pop(0)
                     if self._background_repair(t_rep, report):
                         # budgeted run left groups pending: drain the
@@ -769,6 +872,9 @@ class ObjectGateway:
                         # continuation, not a fresh failure)
                         repair_queue.append((t_rep + cfg.repair_respacing, -1))
                         repair_queue.sort()
+                else:
+                    self._scrub_next = t_evt + cfg.scrub_interval
+                    self._run_scrub(t_evt, report)
 
         for req in reqs:
             boundary_events(req.time)
@@ -779,7 +885,7 @@ class ObjectGateway:
                 if batch:
                     self._flush(batch, report)
                     batch, batch_deadline = [], None
-                report.add_record(self._handle_put(req))
+                report.add_record(self._handle_put(req, report))
                 continue
             if batch and req.time > batch_deadline:
                 self._flush(batch, report)
@@ -896,19 +1002,32 @@ class ObjectGateway:
             return
 
         # 1) fetch: every needed block rides the fabric to the request's
-        # client port. Serial mode gates the whole window's transfers on
-        # the previous window's completion (the synchronous loop cannot
-        # start fetching window N+1 while window N is still decoding);
+        # client port, and every store fetch's crc32 digest is verified
+        # on landing (config.verify_checksums). A mismatch is
+        # reclassified as an ERASURE at the fetch's completion time —
+        # quarantine + tombstone + repair queue — and the request
+        # REPLANS against the shrunken source set (CORE parity first, RS
+        # fallback), so wrong bytes never reach a payload. Direct data
+        # fetches stuck behind a fail-slow source may hedge
+        # (config.hedge): past the deadline derived from the healthy-
+        # fabric estimate, the cheapest single-block recovery plan races
+        # the primary and the first verified winner serves the column.
+        # Serial mode gates the whole window's transfers on the previous
+        # window's completion (the synchronous loop cannot start
+        # fetching window N+1 while window N is still decoding);
         # pipelined mode starts them at plan time.
+        verify_ck = self.config.verify_checksums
         ready: list[dict[BlockKey, float]] = []
         bytes_read: list[int] = []
         cache_hits: list[int] = []
         fetch_ats: list[float] = []
+        alive: list[bool] = []
         fetched: dict[BlockKey, np.ndarray] = {}
         for i, (req, plan) in enumerate(gets):
             client = self._client_port(req)
             tid = tids[i]
-            fetch_at = (
+            gid, row = self._objects[req.object_id]
+            fetch_at0 = fetch_at = (
                 max(plan.planned_at, self._window_free)
                 if serial
                 else plan.planned_at
@@ -922,26 +1041,65 @@ class ObjectGateway:
             key_ready: dict[BlockKey, float] = {}
             nbytes = 0
             hits = 0
+            hedges = 0
+            n_store = 0  # store fetches scheduled for THIS request
+            extra_ops: list = []
+            dropped_direct: set[BlockKey] = set()
+            ok_request = True
             trk = ("tenant", req.tenant)
-            for key in plan.source_keys:
-                blk = pinned.get(key)
-                if blk is None and self.cache is not None:
-                    blk = self.cache.get(key)
-                if blk is not None:
-                    key_ready[key] = max(fetch_at, self._cache_ready.get(key, 0.0))
-                    hits += 1
-                    if tracer.enabled:
-                        tracer.instant(
-                            "cache.hit",
-                            key_ready[key],
-                            tid,
-                            tid,
-                            track=trk,
-                            key=key,
+            # Replan loop: terminates because every corruption detection
+            # permanently quarantines a source (the replan never picks it
+            # again); the attempt cap is pure defense in depth.
+            for _attempt in range(self.code.n * self.code.rows + 1):
+                corrupt: list[tuple[BlockKey, float]] = []
+                stale = False
+                # direct fetches eligible to hedge; the DECISION is
+                # deferred until every primary of this attempt is booked,
+                # so the alternate path can reuse the whole in-flight
+                # fetch set for free
+                h_cands: list[tuple[BlockKey, float, int, float]] = []
+                for key in plan.source_keys:
+                    if key in key_ready:
+                        continue
+                    blk = pinned.get(key)
+                    if blk is None and self.cache is not None:
+                        blk = self.cache.get(key)
+                    if blk is not None:
+                        # cache copies were digest-verified when they
+                        # entered (fetch path) or checked post-decode —
+                        # no re-verify: checksumming models DISK reads
+                        key_ready[key] = max(
+                            fetch_at, self._cache_ready.get(key, 0.0)
                         )
-                else:
+                        hits += 1
+                        if tracer.enabled:
+                            tracer.instant(
+                                "cache.hit",
+                                key_ready[key],
+                                tid,
+                                tid,
+                                track=trk,
+                                key=key,
+                            )
+                        fetched[key] = blk
+                        continue
+                    if not self.store.available(key):
+                        # quarantined by an earlier request of this same
+                        # window: nothing to fetch, the replan below
+                        # routes around it
+                        stale = True
+                        continue
                     blk = self.store.get(key)
                     src_node = self.store.node_of(key)
+                    # committed backlog BEFORE this transfer books its
+                    # own reservation: the hedge deadline must measure
+                    # the fabric as the request found it
+                    pre_backlog = (
+                        self.sim.send_backlog(src_node, req.tenant, fetch_at)
+                        if self.config.hedge and key in plan.direct
+                        else None
+                    )
+                    n_store += 1
                     end = self.sim.transfer(
                         Transfer(
                             src_node,
@@ -953,8 +1111,20 @@ class ObjectGateway:
                             ctx=(tid, tid) if tracer.enabled else None,
                         )
                     )
-                    key_ready[key] = end
                     nbytes += blk.nbytes
+                    self._fetch_bytes[req.tenant] = (
+                        self._fetch_bytes.get(req.tenant, 0) + blk.nbytes
+                    )
+                    if verify_ck and not self.store.verify(key):
+                        # corrupt bytes crossed the fabric and failed
+                        # the digest check on landing — never cached,
+                        # never delivered
+                        corrupt.append((key, end))
+                        continue
+                    if pre_backlog is not None:
+                        h_cands.append((key, pre_backlog, n_store, end))
+                    key_ready[key] = end
+                    fetched[key] = blk
                     if self.cache is not None:
                         self.cache.put(key, blk)
                         self._cache_ready[key] = end
@@ -973,11 +1143,72 @@ class ObjectGateway:
                             src=src_node,
                             bytes=blk.nbytes,
                         )
-                fetched[key] = blk
+                # Deadline baseline: the LEAST-backlogged source this
+                # request fetched from. A fail-slow port's own committed
+                # queue is stretched by the very slowness being detected,
+                # so pricing each candidate against its own backlog would
+                # let a gray source re-baseline its own deadline into
+                # oblivion; the cross-source differential is the signal.
+                base_b = min((b for _, b, _, _ in h_cands), default=0.0)
+                for h_key, _pre_b, n_at, h_end in h_cands:
+                    if hedges >= self.config.hedge_max_retries:
+                        break
+                    h_op, h_bytes, h_hits, launched = self._maybe_hedge(
+                        req, h_key, fetch_at, base_b, n_at, h_end, hedges,
+                        client, deadline, key_ready, fetched, pinned,
+                        report, tid, trk,
+                    )
+                    nbytes += h_bytes
+                    hits += h_hits
+                    if launched:
+                        hedges += 1
+                    if h_op is not None:
+                        extra_ops.append(h_op)
+                        dropped_direct.add(h_key)
+                if not corrupt and not stale:
+                    break
+                detect_at = max((e for _, e in corrupt), default=fetch_at)
+                for key, at in corrupt:
+                    self._note_corrupt(
+                        key,
+                        at,
+                        report,
+                        source="read",
+                        ctx=(tid, tid, trk) if tracer.enabled else None,
+                    )
+                # the degraded replan starts when the LAST bad fetch of
+                # this round landed — detection costs real latency
+                self._clock = fetch_at = max(detect_at, fetch_at)
+                try:
+                    plan = self.planner.plan(gid, row, at=fetch_at)
+                except UnreadableObjectError:
+                    ok_request = False
+                    break
+            if ok_request and (extra_ops or dropped_direct):
+                plan = replace(
+                    plan,
+                    direct=tuple(
+                        k for k in plan.direct if k not in dropped_direct
+                    ),
+                    decodes=plan.decodes + tuple(extra_ops),
+                )
+            gets[i] = (req, plan)
+            if not ok_request:
+                # corruption detections mid-window pushed the object past
+                # tolerance: fail the read (bytes already moved are real)
+                report.add_record(
+                    RequestRecord(
+                        req.time, req.object_id, "get", None, True,
+                        nbytes, 0, hits, tenant=req.tenant,
+                    )
+                )
+                if tracer.enabled:
+                    tracer.end_trace(tid)
+            alive.append(ok_request)
             ready.append(key_ready)
             bytes_read.append(nbytes)
             cache_hits.append(hits)
-            fetch_ats.append(fetch_at)
+            fetch_ats.append(fetch_at0)
 
         # 2) decode: dedup identical reconstructions (a hot degraded
         # object appears once per window, not once per request), then one
@@ -987,6 +1218,8 @@ class ObjectGateway:
         uops = []
         owners: list[list[int]] = []
         for i, (_req, plan) in enumerate(gets):
+            if not alive[i]:
+                continue
             for op in plan.decodes:
                 okey = (op.group_id, op.row, op.kind, op.targets, op.sources)
                 j = unique_idx.get(okey)
@@ -997,6 +1230,19 @@ class ObjectGateway:
                     owners.append([])
                 owners[j].append(i)
         results, units = self.coalescer.execute(uops, lambda k: fetched[k])
+        if verify_ck:
+            # end-to-end integrity: a reconstruction must reproduce the
+            # digest stored at PUT. Sources are verified at fetch time,
+            # so a mismatch here means the decode pipeline itself (or an
+            # unverified path feeding it) produced wrong bytes — a bug,
+            # not a modeled fault.
+            for j, op in enumerate(uops):
+                for col, out in results[j].items():
+                    if self.store.checksum_ok((op.group_id, op.row, col), out) is False:
+                        raise AssertionError(
+                            "decode output digest mismatch for block "
+                            f"({op.group_id}, {op.row}, {col})"
+                        )
         if self.config.decode_cost is not None:
             # modeled-cost mode: deterministic billing — each unit gets
             # its FRACTION of one modeled launch, so a launch's units
@@ -1112,6 +1358,8 @@ class ObjectGateway:
                     costs[col] = len(op.sources)
         window_end = self._window_free
         for i, (req, plan) in enumerate(gets):
+            if not alive[i]:
+                continue
             done = req.time
             for key in plan.direct:
                 done = max(done, ready[i][key])
@@ -1123,6 +1371,7 @@ class ObjectGateway:
                 payload = self._assemble_payload(req, plan, fetched, decoded_per_req[i])
                 if self.config.verify:
                     self._verify_get(req, payload)
+                    report.metrics.counter("verified_gets").inc()
                 if self.config.record_payloads:
                     digest = hashlib.sha256(payload.tobytes()).hexdigest()
             if self.cache is not None:
@@ -1201,11 +1450,250 @@ class ObjectGateway:
         if serial:
             self._window_free = window_end
 
+    # -- integrity plane ---------------------------------------------------------
+    def _note_corrupt(
+        self,
+        key: BlockKey,
+        at: float,
+        report: GatewayReport,
+        source: str,
+        ctx=None,
+        queue_repair: bool = True,
+    ) -> None:
+        """Reclassify a detected corruption as an ERASURE: quarantine the
+        replica (placement and the trusted digest survive — repair can
+        verify its own rebuild), tombstone it in the negative cache so
+        planners stop probing it, and queue a repair pass. ``source``
+        labels the detector (read | scrub | write | repair)."""
+        self.store.quarantine(key)
+        self._lost_at.setdefault(key, at)
+        # any in-flight heal write-back raced the corruption; distrust it
+        self._healing.pop(key, None)
+        if self.cache is not None:
+            self.cache.put_negative(key, at, self.config.negative_ttl)
+        report.metrics.counter("corruption_detected", source=source).inc()
+        t0 = self._corrupted_at.pop(key, None)
+        if t0 is not None:
+            # injection-to-detection gap: the integrity plane's MTTD
+            report.corruption_latency.append(at - t0)
+        if queue_repair and self.config.repair_on_failure:
+            self._repair_queue.append((at + self.config.repair_delay, -2))
+            self._repair_queue.sort()
+        if ctx is not None:
+            tid, pid, trk = ctx
+            self.tracer.instant(
+                "corrupt", at, tid, pid, track=trk, key=key, source=source
+            )
+
+    def _run_scrub(self, at: float, report: GatewayReport) -> None:
+        """One background scrub tick: verify a budget's worth of resident
+        blocks against their stored digests, reclassifying mismatches as
+        erasures. The budget rides the repair pacer's share so scrubbing
+        backs off exactly when foreground latency is under pressure."""
+        share = 1.0
+        if self._pacer is not None:
+            observed = self._observed_p99(report, at)
+            pressure = self._foreground_pressure(at)
+            if pressure > 0.0:
+                observed = max(observed or 0.0, pressure)
+            share = self._pacer.share(observed, self._pacing_slo)
+        budget = max(1, int(self.config.scrub_blocks_per_run * share))
+        bad = self._scrubber.scan(budget)
+        report.metrics.counter("scrub_blocks").inc(budget)
+        tracer = self.tracer
+        stid = 0
+        if tracer.enabled:
+            stid = tracer.begin_trace()
+        for key in bad:
+            self._note_corrupt(
+                key,
+                at,
+                report,
+                source="scrub",
+                ctx=(stid, stid, ("repair", "repair")) if stid else None,
+            )
+        if stid:
+            tracer.root_span(
+                "scrub.run",
+                at,
+                at,
+                stid,
+                track=("repair", "repair"),
+                scanned=min(budget, len(self.store.blocks)),
+                found=len(bad),
+            )
+            tracer.end_trace(stid)
+
+    def _maybe_hedge(
+        self,
+        req,
+        key: BlockKey,
+        fetch_at: float,
+        pre_backlog: float,
+        n_store: int,
+        end: float,
+        hedges: int,
+        client: int,
+        deadline: float | None,
+        key_ready: dict,
+        fetched: dict,
+        pinned: dict,
+        report: GatewayReport,
+        tid: int,
+        trk,
+    ):
+        """Race a slow direct fetch against the planner's cheapest
+        single-block recovery op. Returns ``(op, bytes, hits, launched)``
+        — ``op`` is the winning DecodeOp to splice into the plan (None:
+        deadline not hit, no viable op, out of budget, or the primary
+        won the race anyway).
+
+        The hedge deadline is ``hedge_threshold x`` the HEALTHY-fabric
+        estimate: ``pre_backlog`` is the committed backlog of the
+        request's LEAST-backlogged source (the caller computes the min
+        across its fetch set), plus serialization at the tenant's
+        guaranteed rate. A fail-slow port's own queue is stretched by
+        the very slowness being detected, so the estimate never reads
+        the lagging source's backlog — the degraded fetch shows up as
+        ``end >> estimate`` instead of quietly re-baselining its own
+        deadline. Speculative bytes are capped
+        by a per-tenant ledger at ``hedge_budget`` of the tenant's
+        cumulative primary fetch bytes — the extra-fabric-traffic bound
+        is structural, not observed."""
+        cfg = self.config
+        tenant = req.tenant
+        # expected completion of THIS fetch on a healthy fabric: source
+        # backlog + the request's own client-NIC serialization so far
+        # (n_store store fetches, this one included, share the client
+        # port) — self-inflicted queueing is NOT gray failure and must
+        # not trip the hedge
+        est = pre_backlog + n_store * self._block_bytes / (
+            self.sim.weight_of(tenant) * self.profile.node_bandwidth
+        )
+        h_at = fetch_at + cfg.hedge_threshold * (cfg.hedge_backoff ** hedges) * est
+        if end <= h_at:
+            return None, 0, 0, False
+        gid, row, col = key
+        self._clock = h_at
+        # Rank alternate paths by NEW fetch bytes, not Table-1 totals: a
+        # horizontal op whose row sources are already riding this
+        # request's fabric costs one parity fetch, while the "cheaper"
+        # vertical op fetches t fresh column blocks. Disqualify any path
+        # that routes new fetches through the lagging source's node —
+        # under column-aligned placement the vertical sources can share
+        # the stuck column's node, making the byte-cheapest op the one
+        # op guaranteed to lose the race.
+        lagging = self.store.node_of(key)
+        op = None
+        h_cost = 0
+        for cand in self.planner.recovery_ops(gid, row, col):
+            fresh = [
+                s
+                for s in cand.sources
+                if s not in key_ready
+                and s not in pinned
+                and not (self.cache is not None and s in self.cache)
+            ]
+            if any(self.store.node_of(s) == lagging for s in fresh):
+                continue
+            cost = len(fresh) * self._block_bytes
+            if op is None or cost < h_cost:
+                op, h_cost = cand, cost
+        if op is None:
+            return None, 0, 0, False
+        spent = self._hedge_bytes.get(tenant, 0)
+        if spent + h_cost > cfg.hedge_budget * self._fetch_bytes.get(tenant, 0):
+            report.metrics.counter("hedge_budget_denied", tenant=tenant).inc()
+            return None, 0, 0, False
+        report.metrics.counter("hedge_launched", tenant=tenant).inc()
+        nbytes = 0
+        hits = 0
+        h_ready = h_at
+        ok = True
+        for s in op.sources:
+            if s in key_ready:
+                # already riding the fabric for this request — free
+                h_ready = max(h_ready, key_ready[s])
+                continue
+            sblk = pinned.get(s)
+            if sblk is None and self.cache is not None:
+                sblk = self.cache.get(s)
+            if sblk is not None:
+                r = max(h_at, self._cache_ready.get(s, 0.0))
+                key_ready[s] = r
+                fetched[s] = sblk
+                hits += 1
+                h_ready = max(h_ready, r)
+                continue
+            if not self.store.available(s):
+                ok = False
+                break
+            sblk = self.store.get(s)
+            s_end = self.sim.transfer(
+                Transfer(
+                    self.store.node_of(s),
+                    client,
+                    sblk.nbytes,
+                    h_at,
+                    tenant=tenant,
+                    deadline=deadline,
+                    ctx=(tid, tid) if self.tracer.enabled else None,
+                )
+            )
+            nbytes += sblk.nbytes
+            self._hedge_bytes[tenant] = (
+                self._hedge_bytes.get(tenant, 0) + sblk.nbytes
+            )
+            if cfg.verify_checksums and not self.store.verify(s):
+                # the speculation tripped over latent damage: quarantine
+                # it and abandon this hedge (the primary still serves)
+                self._note_corrupt(
+                    s,
+                    s_end,
+                    report,
+                    source="read",
+                    ctx=(tid, tid, trk) if self.tracer.enabled else None,
+                )
+                ok = False
+                break
+            key_ready[s] = s_end
+            fetched[s] = sblk
+            if self.cache is not None:
+                self.cache.put(s, sblk)
+                self._cache_ready[s] = s_end
+            h_ready = max(h_ready, s_end)
+        won = ok and (h_ready + self._decode_launch_estimate() < end)
+        report.metrics.counter(
+            "hedge_wins" if won else "hedge_losses", tenant=tenant
+        ).inc()
+        if nbytes:
+            report.metrics.counter("hedge_bytes", tenant=tenant).inc(nbytes)
+        if self.tracer.enabled:
+            self.tracer.span(
+                "hedge",
+                h_at,
+                max(h_ready, h_at),
+                tid,
+                tid,
+                track=trk,
+                key=key,
+                kind=op.kind,
+                won=won,
+                attempt=hedges + 1,
+            )
+        return (op if won else None), nbytes, hits, True
+
     # -- PUT --------------------------------------------------------------------
-    def _handle_put(self, req: Request) -> RequestRecord:
+    def _handle_put(self, req: Request, report: GatewayReport) -> RequestRecord:
         """Overwrite one object (one CORE row) in place: re-encode the row
         RS codeword and XOR-delta the vertical parity row (linearity of
-        both codes — no other row is touched)."""
+        both codes — no other row is touched).
+
+        The parity read-modify-write verifies the stored parity digest
+        BEFORE folding the delta in: XOR-ing into silently-corrupt bytes
+        and restamping would LAUNDER the corruption under a fresh valid
+        checksum. A corrupt parity block is treated like an unavailable
+        one — detected, quarantined, reconciled by repair."""
         oid = req.object_id
         if oid not in self._objects:
             return RequestRecord(
@@ -1230,11 +1718,24 @@ class ObjectGateway:
             old_key = (gid, row, c)
             par_key = (gid, parity_row, c)
             # a lost parity column is reconciled later by repair instead
-            if self.store.available(par_key):
+            par_ok = self.store.available(par_key)
+            if (
+                par_ok
+                and self.config.verify_checksums
+                and not self.store.verify(par_key)
+            ):
+                # the RMW just read corrupt parity bytes: do NOT apply
+                # the delta (that would launder the damage under a new
+                # digest) — reclassify as an erasure right here
+                self._note_corrupt(par_key, req.time, report, source="write")
+                par_ok = False
+            if par_ok:
                 delta = np.bitwise_xor(old_row[c], new_row[c])
                 self.store.put_block(
                     par_key, np.bitwise_xor(self.store.blocks[par_key], delta)
                 )
+                # the write re-digests the block over its new bytes
+                self._corrupted_at.pop(par_key, None)
                 if self.cache is not None:
                     # only a parity block actually WRITTEN sheds its
                     # known-down tombstone; an unavailable one stays
@@ -1253,6 +1754,8 @@ class ObjectGateway:
                 done = max(done, end)
                 nbytes += q
             self.store.put_block(old_key, new_row[c])
+            # a full overwrite wipes any undetected silent damage
+            self._corrupted_at.pop(old_key, None)
             end = self.sim.transfer(
                 Transfer(
                     client,
@@ -1305,7 +1808,53 @@ class ObjectGateway:
     # -- cluster fault events (scenario engine) ----------------------------------
     def _apply_cluster_event(self, evt, report: GatewayReport) -> bool:
         """Apply one node-level fault event; returns True when the event
-        creates missing blocks that background repair should chase."""
+        creates missing blocks that background repair should chase.
+
+        Gray-failure events ride the same stream: SlowNode/SlowNicEvent
+        degrade the fabric model's per-node rate (no blocks lost — repair
+        is not triggered), and CorruptionEvent flips bits in place. A
+        silent corruption (bitflip / torn) creates NO missing block yet:
+        the damage surfaces only when a digest check — fetch, scrub, or
+        repair-source verify — catches it, which is exactly the
+        detection-latency gap the integrity plane measures."""
+        if isinstance(evt, (SlowNodeEvent, SlowNicEvent)):
+            direction = getattr(evt, "direction", "both")
+            self.sim.set_node_rate(evt.node, evt.rate_factor, direction=direction)
+            report.metrics.counter(
+                "slow_events", node=str(evt.node), direction=direction
+            ).inc()
+            return False
+        if isinstance(evt, CorruptionEvent):
+            if evt.blocks:
+                keys = [tuple(k) for k in evt.blocks]
+            else:
+                # deterministic victim pick: crc32-keyed order over the
+                # node's resident blocks (stable across runs and immune
+                # to dict-insertion order)
+                keys = sorted(
+                    (k for k in self.store.keys_on_node(evt.node)
+                     if k in self.store.blocks),
+                    key=lambda k: zlib.crc32(repr(k).encode()),
+                )
+                if evt.count > 0:
+                    keys = keys[: evt.count]
+            wants_repair = False
+            for key in keys:
+                if not self.store.corrupt_block(key, mode=evt.mode):
+                    continue
+                report.metrics.counter("blocks_corrupted", mode=evt.mode).inc()
+                if evt.mode == "erase":
+                    # hard loss, like a test's drop_block: visible to the
+                    # planner immediately, chased by repair immediately
+                    self._lost_at.setdefault(key, evt.time)
+                    self._healing.pop(key, None)
+                    wants_repair = True
+                else:
+                    # SILENT: the store still serves the block; only the
+                    # stale digest knows. Stamp the injection time so
+                    # detection latency is measurable.
+                    self._corrupted_at.setdefault(key, evt.time)
+            return wants_repair
         if isinstance(evt, NodeRecoverEvent):
             keys = self.store.keys_on_node(evt.node)
             self.store.heal_node(evt.node)
@@ -1423,6 +1972,25 @@ class ObjectGateway:
             if not missing:
                 self._repair_stuck.pop(gid, None)
                 continue
+            if self.config.verify_checksums:
+                # the rebuild reads this group's surviving blocks as
+                # decode sources — verify them first so a silently-
+                # corrupt source joins the missing set instead of
+                # poisoning the regenerated blocks (which would carry a
+                # fresh digest over wrong bytes)
+                bad = [
+                    (gid, r, c)
+                    for r in range(self.code.rows)
+                    for c in range(self.code.n)
+                    if (gid, r, c) in self.store.blocks
+                    and not self.store.verify((gid, r, c))
+                ]
+                for key in bad:
+                    self._note_corrupt(
+                        key, at_time, report, source="repair",
+                        queue_repair=False,
+                    )
+                    missing.append(key)
             if self._repair_stuck.get(gid) == frozenset(missing):
                 continue
             pending.append((gid, missing))

@@ -159,6 +159,36 @@ class DegradedReadPlanner:
             f"only {len(avail_row)} < k={k} row blocks survive"
         )
 
+    def recovery_ops(
+        self, group_id: str, row: int, col: int
+    ) -> tuple[DecodeOp, ...]:
+        """Every viable single-block reconstruction of ONE data column,
+        Table-1-cheapest first — the hedged-fetch alternate paths: when
+        the direct fetch of (group_id, row, col) is stuck behind a
+        fail-slow source, the gateway races it against one of these
+        instead of waiting. CORE's vertical XOR (t sources) when the
+        column survives, RS over the row (k sources) when enough row
+        blocks do. The gateway picks among them by PLACEMENT: vertical
+        sources share the stuck column's node under column-aligned
+        placement, so the byte-cheapest op can be the one op guaranteed
+        to lose the race."""
+        ops = []
+        if self._column_intact(group_id, row, col):
+            ops.append(self._vertical_op(group_id, row, col))
+        avail_row = [
+            c
+            for c in range(self.code.n)
+            if c != col and self._available((group_id, row, c))
+        ]
+        if len(avail_row) >= self.code.k:
+            ops.append(self._horizontal_op(group_id, row, avail_row, [col]))
+        return tuple(ops)
+
+    def recovery_op(self, group_id: str, row: int, col: int) -> DecodeOp | None:
+        """Cheapest single-block reconstruction (first of recovery_ops)."""
+        ops = self.recovery_ops(group_id, row, col)
+        return ops[0] if ops else None
+
     # -- helpers ---------------------------------------------------------------
     def _column_intact(self, group_id: str, row: int, col: int) -> bool:
         return all(

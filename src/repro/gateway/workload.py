@@ -61,6 +61,47 @@ class CapacityLossEvent:
 
 
 @dataclass(frozen=True)
+class CorruptionEvent:
+    """Silent corruption: blocks on ``node`` are damaged in place (bit
+    flip or torn write) with their stored checksums left stale — the
+    gateway notices nothing until a fetch or scrub verifies the bytes,
+    then reclassifies the mismatch as an erasure (tombstone + degraded
+    read + repair). ``blocks`` names explicit (group, row, col) victims;
+    when empty, the first ``count`` blocks on the node (crc32-ordered,
+    process-stable) are hit — ``count=0`` means every block on the node.
+    """
+
+    time: float
+    node: int
+    blocks: tuple = ()  # explicit BlockKey victims, () => derive from node
+    mode: str = "bitflip"  # bitflip | torn | erase
+    count: int = 1
+
+
+@dataclass(frozen=True)
+class SlowNodeEvent:
+    """Fail-slow (gray) degradation: the node stays up and its bytes are
+    intact, but every transfer it participates in runs at
+    ``rate_factor`` x the healthy bandwidth. ``rate_factor=1.0``
+    restores full speed (the recover edge of a flapping-slow pair)."""
+
+    time: float
+    node: int
+    rate_factor: float = 0.1
+
+
+@dataclass(frozen=True)
+class SlowNicEvent:
+    """Directional fail-slow: only the node's send or receive side
+    degrades (a half-duplex NIC fault / oversubscribed uplink)."""
+
+    time: float
+    node: int
+    rate_factor: float = 0.1
+    direction: str = "send"  # send | recv
+
+
+@dataclass(frozen=True)
 class WorkloadConfig:
     num_objects: int
     num_requests: int

@@ -26,6 +26,12 @@ root span id so children parent on it before the root is finalized):
                      op_ready (own sources landed),
                      ready (launch-wide source barrier)
   ``verify``         instant at delivery (ground-truth check, 0 sim cost)
+  ``hedge``          one per speculative alternate-path fetch racing a
+                     slow direct fetch [hedge launch, last hedge source
+                     landed]; attrs: key, kind (V|H), won, attempt
+  ``corrupt``        instant at digest-mismatch detection (corruption
+                     reclassified as an erasure); attrs: key, source
+                     (read | scrub | write | repair)
 
 Infrastructure tracks (emitted into whichever request/repair trace
 caused the work):
@@ -46,6 +52,12 @@ Repair traces (one per background-repair run):
                      blocks
   ``repair.decode``  the repair's decode billing on the engine pool
   ``repair.heal``    instant when a block becomes readable again
+
+Scrub traces (one per background scrub tick, on the repair track):
+
+  ``scrub.run``      root span over the tick; attrs: scanned, found
+                     (``corrupt`` instants for blocks it catches parent
+                     on it)
 
 Track layout (Perfetto: one process per group, one thread per member):
 

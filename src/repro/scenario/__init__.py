@@ -10,11 +10,17 @@
 # failures (one switch, many disks — the correlated mode the
 # XORing-Elephants study emphasizes) and flapping nodes are builders
 # that expand into the same three node-level events, so the gateway's
-# event loop stays small. generate_scenario draws seeded random traces
+# event loop stays small. Gray-failure events join them: CorruptionEvent
+# (silent bit-flip / torn write / erase on one node's blocks),
+# SlowNodeEvent / SlowNicEvent (fail-slow: a rate factor degrades the
+# node's effective link speed until a factor-1.0 event restores it;
+# flapping_slow expands a duty cycle into such pairs). generate_scenario draws seeded random traces
 # from a ScenarioConfig with a hard admission bound: with anti-colocated
 # placement, f concurrently-affected nodes cost any stripe at most f
 # blocks, so traces bounded at f <= n - k never exceed the code's
-# tolerance — every GET stays servable and every repair recoverable.
+# tolerance — every GET stays servable and every repair recoverable
+# (corruption counts against the same bound; fail-slow events don't —
+# slow is not down).
 # Traces serialize to JSON so a failing seed commits as a fixture.
 #
 # The closed loop (engine.py + gateway/gateway.py + storage/repair.py):
@@ -44,6 +50,7 @@ from repro.scenario.trace import (
     ScenarioConfig,
     ScenarioTrace,
     flapping_node,
+    flapping_slow,
     generate_scenario,
     load_surge,
     rack_failure,
@@ -62,6 +69,7 @@ __all__ = [
     "correlated_surge_setup",
     "deterministic_fingerprint",
     "flapping_node",
+    "flapping_slow",
     "generate_scenario",
     "load_surge",
     "rack_failure",

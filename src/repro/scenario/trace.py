@@ -3,14 +3,16 @@
 A ``ScenarioTrace`` is a time-sorted sequence of cluster fault events —
 node crash/recover pairs (transient failures: reboots, partitions),
 capacity losses (disk death: blocks destroyed, only repair brings them
-back), and load surges (arrival-rate multipliers the workload generator
-honours) — over a cluster whose nodes are grouped into racks (failure
-domains). Rack-level events and flapping nodes are *builders* that
-expand into the same node-level vocabulary, so the gateway only ever
-consumes three event types (``FailureEvent`` / ``NodeRecoverEvent`` /
-``CapacityLossEvent`` from ``repro.gateway.workload``) and every trace
-is replayable verbatim: same trace + same workload seed => same
-simulated run.
+back), load surges (arrival-rate multipliers the workload generator
+honours), and GRAY failures — ``CorruptionEvent`` (silent bit flips /
+torn writes: nothing fails until a checksum verify catches the bytes)
+and ``SlowNodeEvent`` / ``SlowNicEvent`` (fail-slow rate-factor
+degradation honoured by the fabric ports) — over a cluster whose nodes
+are grouped into racks (failure domains). Rack-level events, flapping
+nodes and flapping-slow nodes are *builders* that expand into the same
+node-level vocabulary (``repro.gateway.workload`` event types), and
+every trace is replayable verbatim: same trace + same workload seed =>
+same simulated run.
 
 ``generate_scenario`` draws a random trace from a seeded
 ``ScenarioConfig``: Poisson background crashes with exponential
@@ -35,22 +37,74 @@ import numpy as np
 
 from repro.gateway.workload import (
     CapacityLossEvent,
+    CorruptionEvent,
     DEFAULT_TENANT,
     FailureEvent,
     NodeRecoverEvent,
     Request,
+    SlowNicEvent,
+    SlowNodeEvent,
     WorkloadConfig,
     zipf_probs,
 )
 
-ClusterEvent = FailureEvent | NodeRecoverEvent | CapacityLossEvent
+ClusterEvent = (
+    FailureEvent
+    | NodeRecoverEvent
+    | CapacityLossEvent
+    | CorruptionEvent
+    | SlowNodeEvent
+    | SlowNicEvent
+)
 
 _EVENT_TYPES = {
     "crash": FailureEvent,
     "recover": NodeRecoverEvent,
     "capacity_loss": CapacityLossEvent,
+    "corrupt": CorruptionEvent,
+    "slow_node": SlowNodeEvent,
+    "slow_nic": SlowNicEvent,
 }
 _EVENT_NAMES = {v: k for k, v in _EVENT_TYPES.items()}
+
+
+def _event_to_jsonable(e: ClusterEvent) -> dict:
+    d: dict = {"kind": _EVENT_NAMES[type(e)], "time": e.time, "node": e.node}
+    if isinstance(e, CorruptionEvent):
+        d["blocks"] = [list(k) for k in e.blocks]
+        d["mode"] = e.mode
+        d["count"] = e.count
+    elif isinstance(e, (SlowNodeEvent, SlowNicEvent)):
+        d["rate_factor"] = e.rate_factor
+        if isinstance(e, SlowNicEvent):
+            d["direction"] = e.direction
+    return d
+
+
+def _event_from_jsonable(d: dict) -> ClusterEvent:
+    kind, t, node = d["kind"], float(d["time"]), int(d["node"])
+    if kind == "corrupt":
+        return CorruptionEvent(
+            time=t,
+            node=node,
+            blocks=tuple(
+                (str(k[0]), int(k[1]), int(k[2])) for k in d.get("blocks", [])
+            ),
+            mode=str(d.get("mode", "bitflip")),
+            count=int(d.get("count", 1)),
+        )
+    if kind == "slow_node":
+        return SlowNodeEvent(
+            time=t, node=node, rate_factor=float(d.get("rate_factor", 0.1))
+        )
+    if kind == "slow_nic":
+        return SlowNicEvent(
+            time=t,
+            node=node,
+            rate_factor=float(d.get("rate_factor", 0.1)),
+            direction=str(d.get("direction", "send")),
+        )
+    return _EVENT_TYPES[kind](time=t, node=node)
 
 
 @dataclass(frozen=True)
@@ -92,12 +146,17 @@ class ScenarioTrace:
         return sorted(self.events, key=lambda e: e.time)
 
     def fault_events(self) -> list[ClusterEvent]:
-        """Down events only (crashes and capacity losses) — recoveries
-        undo faults, they aren't faults. The count durability claims
-        should be quoted against."""
+        """Down/degrade events only — recoveries undo faults, they aren't
+        faults, and a slow event restoring full speed (rate_factor 1.0)
+        is likewise a recovery. The count durability claims should be
+        quoted against."""
         return [
             e for e in self.cluster_events()
             if not isinstance(e, NodeRecoverEvent)
+            and not (
+                isinstance(e, (SlowNodeEvent, SlowNicEvent))
+                and e.rate_factor >= 1.0
+            )
         ]
 
     def rate_multiplier(self, t: float) -> float:
@@ -127,9 +186,16 @@ class ScenarioTrace:
             self.events, key=lambda e: (e.time, isinstance(e, NodeRecoverEvent))
         )
         for evt in ordered:
+            if isinstance(evt, (SlowNodeEvent, SlowNicEvent)):
+                continue  # data intact: slowness never consumes tolerance
             if isinstance(evt, NodeRecoverEvent):
                 if evt.node not in lost:
                     affected.discard(evt.node)
+            elif isinstance(evt, CorruptionEvent):
+                # corrupt bytes are erasures once detected; like capacity
+                # loss, the trace can't know when repair heals them
+                lost.add(evt.node)
+                affected.add(evt.node)
             else:
                 if isinstance(evt, CapacityLossEvent):
                     lost.add(evt.node)
@@ -143,10 +209,7 @@ class ScenarioTrace:
             "num_nodes": self.num_nodes,
             "nodes_per_rack": self.nodes_per_rack,
             "seed": self.seed,
-            "events": [
-                {"kind": _EVENT_NAMES[type(e)], "time": e.time, "node": e.node}
-                for e in self.cluster_events()
-            ],
+            "events": [_event_to_jsonable(e) for e in self.cluster_events()],
             "surges": [
                 {"time": s.time, "duration": s.duration, "multiplier": s.multiplier}
                 for s in self.surges
@@ -159,10 +222,7 @@ def trace_from_jsonable(obj: dict) -> ScenarioTrace:
         num_nodes=int(obj["num_nodes"]),
         nodes_per_rack=int(obj.get("nodes_per_rack", 8)),
         seed=obj.get("seed"),
-        events=tuple(
-            _EVENT_TYPES[e["kind"]](time=float(e["time"]), node=int(e["node"]))
-            for e in obj.get("events", [])
-        ),
+        events=tuple(_event_from_jsonable(e) for e in obj.get("events", [])),
         surges=tuple(
             LoadSurge(float(s["time"]), float(s["duration"]), float(s["multiplier"]))
             for s in obj.get("surges", [])
@@ -205,6 +265,28 @@ def flapping_node(
     return replace(trace, events=tuple(sorted(events, key=lambda e: e.time)))
 
 
+def flapping_slow(
+    trace: ScenarioTrace,
+    node: int,
+    start: float,
+    period: float,
+    count: int,
+    rate_factor: float = 0.1,
+    duty: float = 0.5,
+) -> ScenarioTrace:
+    """Flapping fail-slow (the nastiest gray mode: intermittently slow,
+    never down): ``count`` slow/restore cycles of ``period`` seconds,
+    degraded to ``rate_factor`` for ``duty`` of every cycle."""
+    events = list(trace.events)
+    for i in range(count):
+        t0 = start + i * period
+        events.append(SlowNodeEvent(time=t0, node=node, rate_factor=rate_factor))
+        events.append(
+            SlowNodeEvent(time=t0 + period * duty, node=node, rate_factor=1.0)
+        )
+    return replace(trace, events=tuple(sorted(events, key=lambda e: e.time)))
+
+
 def load_surge(
     trace: ScenarioTrace, time: float, duration: float, multiplier: float
 ) -> ScenarioTrace:
@@ -237,6 +319,12 @@ class ScenarioConfig:
     flap_nodes: int = 0
     flap_period: float = 0.2
     flap_count: int = 3
+    # gray failures: silent corruption + fail-slow (Poisson, per second)
+    corruption_rate: float = 0.0
+    corruption_blocks: int = 2  # blocks damaged per corruption event
+    slow_rate: float = 0.0
+    slow_factor: float = 0.1  # degraded bandwidth multiplier
+    mean_slow_time: float = 0.5  # exponential slow-episode length
     surges: tuple = ()  # LoadSurge passthrough
     seed: int = 0
 
@@ -267,6 +355,21 @@ def generate_scenario(cfg: ScenarioConfig) -> ScenarioTrace:
         else:
             candidates.append((t, node, "capacity_loss", None))
 
+    t = 0.0
+    while cfg.corruption_rate > 0:
+        t += float(rng.exponential(1.0 / cfg.corruption_rate))
+        if t >= cfg.duration:
+            break
+        candidates.append((t, int(rng.integers(cfg.num_nodes)), "corrupt", None))
+
+    t = 0.0
+    while cfg.slow_rate > 0:
+        t += float(rng.exponential(1.0 / cfg.slow_rate))
+        if t >= cfg.duration:
+            break
+        slow_for = float(rng.exponential(cfg.mean_slow_time))
+        candidates.append((t, int(rng.integers(cfg.num_nodes)), "slow", t + slow_for))
+
     base = ScenarioTrace(
         num_nodes=cfg.num_nodes, nodes_per_rack=cfg.nodes_per_rack, seed=cfg.seed
     )
@@ -291,6 +394,14 @@ def generate_scenario(cfg: ScenarioConfig) -> ScenarioTrace:
     affected: dict[int, float] = {}  # node -> release time (inf: permanent)
     events: list[ClusterEvent] = []
     for down_t, node, kind, recover_t in candidates:
+        if kind == "slow":
+            # fail-slow never consumes the erasure budget: the bytes are
+            # intact and every transfer still completes — admit freely
+            events.append(
+                SlowNodeEvent(time=down_t, node=node, rate_factor=cfg.slow_factor)
+            )
+            events.append(SlowNodeEvent(time=recover_t, node=node, rate_factor=1.0))
+            continue
         # STRICT release: a node recovering at exactly down_t still
         # counts as overlapping, so the bound holds under any
         # same-instant event ordering downstream
@@ -303,6 +414,15 @@ def generate_scenario(cfg: ScenarioConfig) -> ScenarioTrace:
             continue  # would exceed tolerance: drop (rack bursts trim here)
         if kind == "capacity_loss":
             events.append(CapacityLossEvent(time=down_t, node=node))
+            affected[node] = float("inf")
+        elif kind == "corrupt":
+            # corrupt blocks are erasures once detected; like capacity
+            # loss, conservatively hold the node's budget slot forever
+            events.append(
+                CorruptionEvent(
+                    time=down_t, node=node, count=cfg.corruption_blocks
+                )
+            )
             affected[node] = float("inf")
         else:
             events.append(FailureEvent(time=down_t, node=node))

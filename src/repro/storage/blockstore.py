@@ -7,6 +7,16 @@ nodes, so a node failure costs each group at most one block — the failure
 model under which the paper's per-column/-row analysis holds.
 
 Data lives in host numpy (this is the "disk"); codec math runs in JAX.
+
+Integrity plane: every stored block carries a crc32 digest computed at
+PUT time (``checksums``). ``verify`` recomputes a block's digest against
+the stored one — a mismatch means SILENT corruption (a bit flip or torn
+write injected by ``corrupt_block`` leaves the stored digest stale on
+purpose, exactly like a disk returning bad bytes under a good extent
+map). The gateway reclassifies a verify failure as an erasure:
+``quarantine`` removes the bytes from the readable set while keeping the
+placement and the reference digest, so repair re-places the block in
+situ and the repaired bytes can be checked against the original digest.
 """
 
 from __future__ import annotations
@@ -29,7 +39,14 @@ class BlockStore:
     blocks: dict[BlockKey, np.ndarray] = field(default_factory=dict)
     placement: dict[BlockKey, int] = field(default_factory=dict)
     failed_nodes: set[int] = field(default_factory=set)
+    checksums: dict[BlockKey, int] = field(default_factory=dict)
     _group_counter: int = 0
+
+    # -- integrity -------------------------------------------------------------
+    @staticmethod
+    def digest(data: np.ndarray) -> int:
+        """crc32c-style content digest of a block's bytes."""
+        return zlib.crc32(np.asarray(data).tobytes())
 
     # -- placement -----------------------------------------------------------
     def _place_group(self, group_id: str, rows: int, cols: int) -> None:
@@ -78,7 +95,9 @@ class BlockStore:
         self._place_group(group_id, rows, cols)
         for r in range(rows):
             for c in range(cols):
-                self.blocks[(group_id, r, c)] = np.asarray(matrix[r, c])
+                blk = np.asarray(matrix[r, c])
+                self.blocks[(group_id, r, c)] = blk
+                self.checksums[(group_id, r, c)] = self.digest(blk)
 
     def put_block(self, key: BlockKey, data: np.ndarray, node: int | None = None) -> None:
         cur = self.placement.get(key)
@@ -121,7 +140,9 @@ class BlockStore:
                 self.placement[key] = cands[
                     zlib.crc32(repr(key).encode()) % len(cands)
                 ]
-        self.blocks[key] = np.asarray(data)
+        blk = np.asarray(data)
+        self.blocks[key] = blk
+        self.checksums[key] = self.digest(blk)
 
     def node_of(self, key: BlockKey) -> int:
         return self.placement[key]
@@ -137,6 +158,23 @@ class BlockStore:
         if not self.available(key):
             raise KeyError(f"block {key} unavailable (node failed or missing)")
         return self.blocks[key]
+
+    def verify(self, key: BlockKey) -> bool:
+        """Recompute ``key``'s digest against the one stored at PUT.
+        False means silent corruption. Blocks with no stored digest
+        (pre-integrity writers) pass vacuously."""
+        want = self.checksums.get(key)
+        if want is None or key not in self.blocks:
+            return True
+        return self.digest(self.blocks[key]) == want
+
+    def checksum_ok(self, key: BlockKey, data: np.ndarray) -> bool | None:
+        """Check reconstructed ``data`` against ``key``'s reference digest
+        (decode-output verification). None when no digest is on file."""
+        want = self.checksums.get(key)
+        if want is None:
+            return None
+        return self.digest(data) == want
 
     def keys_on_node(self, node: int) -> list[BlockKey]:
         """All block keys currently placed on ``node`` (whether or not the
@@ -160,13 +198,56 @@ class BlockStore:
         for key in lost:
             self.blocks.pop(key, None)
             self.placement.pop(key, None)
+            self.checksums.pop(key, None)
         self.failed_nodes.discard(int(node))
         return lost
 
-    def drop_block(self, key: BlockKey) -> None:
-        """Targeted single-block corruption (for enforced failure patterns):
-        reassigns the block to a tombstone 'failed' placement."""
+    # -- corruption ------------------------------------------------------------
+    def corrupt_block(self, key: BlockKey, mode: str = "bitflip") -> bool:
+        """Damage one stored block in place — the single implementation
+        behind both enforced-failure-pattern tests and the scenario
+        engine's ``CorruptionEvent``.
+
+        ``bitflip`` flips one bit at a key-derived offset; ``torn``
+        zeroes the trailing half (a torn write); both leave the stored
+        digest STALE, so the damage is silent until a fetch or scrub
+        verifies. ``erase`` destroys the bytes outright (the old
+        ``drop_block`` semantics). Returns False (no-op) when the block
+        holds no bytes to damage. Always writes a fresh array — callers
+        (the cache, test expectations) may hold references to the old
+        one."""
+        blk = self.blocks.get(key)
+        if blk is None:
+            return False
+        if mode == "erase":
+            self.blocks.pop(key, None)
+            return True
+        flat = np.asarray(blk).copy().reshape(-1).view(np.uint8)
+        if flat.size == 0:
+            return False
+        if mode == "bitflip":
+            pos = zlib.crc32(repr(key).encode()) % flat.size
+            flat[pos] ^= 1 << (zlib.crc32(repr(key).encode(), 7) % 8)
+        elif mode == "torn":
+            flat[flat.size // 2 :] = 0
+        else:
+            raise ValueError(f"unknown corruption mode {mode!r}")
+        self.blocks[key] = flat.view(np.asarray(blk).dtype).reshape(
+            np.asarray(blk).shape
+        )
+        return True
+
+    def quarantine(self, key: BlockKey) -> None:
+        """Detection outcome: pull corrupt bytes out of the readable set.
+        Placement and the reference digest survive, so repair re-puts the
+        block on its original node and the repaired bytes can be verified
+        against the original content digest."""
         self.blocks.pop(key, None)
+
+    def drop_block(self, key: BlockKey) -> None:
+        """Targeted single-block erasure (for enforced failure patterns).
+        Thin wrapper over the unified corruption path."""
+        self.corrupt_block(key, mode="erase")
 
     def failure_matrix(self, group_id: str, rows: int, cols: int) -> np.ndarray:
         fm = np.zeros((rows, cols), dtype=bool)

@@ -46,6 +46,13 @@ in ``tenant_deadline_missed``).
 Both modes conserve bytes exactly and an uncontended transfer finishes at
 (essentially) the same time either way; they differ only in how tenants
 interleave under contention.
+
+Fail-slow (gray) degradation: ``set_node_rate(node, factor, direction)``
+multiplies a node's effective send/recv bandwidth — both transfer modes
+honour it, and ``send_backlog`` deliberately does NOT (it keeps quoting
+the healthy rate, so the gateway's hedging deadline detects a slow
+source as "taking far longer than the estimate" rather than silently
+re-baselining around it).
 """
 
 from __future__ import annotations
@@ -222,6 +229,10 @@ class NetSimulator:
     # interned ("fabric", "portN") track tuples — xfer spans are the
     # hottest emission site, one per transfer
     _port_tracks: dict = field(default_factory=dict)
+    # fail-slow (gray) degradation: ("s"|"r", node) -> rate factor in
+    # (0, 1]. A transfer runs at node_bandwidth x min(send-side factor,
+    # recv-side factor) — the slow NIC is the bottleneck of the path.
+    _node_rate: dict = field(default_factory=dict)
 
     def __post_init__(self):
         # weight 0 would mean "tenant paused" — this event model cannot
@@ -269,6 +280,39 @@ class NetSimulator:
         # timelines are hole-free and weight-1.0 transfers can take the
         # O(1) contiguous fast path (schedule-identical to chunking)
         self._seen_throttled = False
+
+    def set_node_rate(
+        self, node: int, factor: float, direction: str = "both"
+    ) -> None:
+        """Fail-slow injection actuator: degrade (or restore) a node's
+        effective link rate. ``factor`` multiplies the healthy bandwidth
+        for transfers the node participates in; 1.0 restores full speed.
+        ``direction`` is ``"send"``, ``"recv"`` or ``"both"`` (a
+        SlowNicEvent degrades one side, a SlowNodeEvent both). Applies to
+        transfers scheduled AFTER the call — reservations already placed
+        keep their timings, mirroring ``set_tenant_weight``."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"rate factor must be in (0, 1], got {factor}")
+        if direction not in ("send", "recv", "both"):
+            raise ValueError(f"direction must be send|recv|both, got {direction!r}")
+        sides = ("s", "r") if direction == "both" else (direction[0],)
+        for side in sides:
+            if factor >= 1.0:
+                self._node_rate.pop((side, int(node)), None)
+            else:
+                self._node_rate[(side, int(node))] = float(factor)
+
+    def node_rate(self, node: int, direction: str = "send") -> float:
+        """Current rate factor of one side of a node (1.0 = healthy)."""
+        return self._node_rate.get((direction[0], int(node)), 1.0)
+
+    def _link_rate(self, src_node: int, dst_node: int) -> float:
+        if not self._node_rate:  # healthy fast path
+            return 1.0
+        return min(
+            self._node_rate.get(("s", src_node), 1.0),
+            self._node_rate.get(("r", dst_node), 1.0),
+        )
 
     def set_tenant_weight(self, tenant, weight: float) -> None:
         """Re-weight a tenant mid-run (the SLO-aware repair pacer's
@@ -372,7 +416,11 @@ class NetSimulator:
 
     # -- fifo: the PR-1 hold-until-done model ---------------------------------
     def _transfer_fifo(self, t: Transfer, tenant) -> tuple[float, float, float]:
-        bw = self.profile.node_bandwidth * self.weight_of(tenant)
+        bw = (
+            self.profile.node_bandwidth
+            * self.weight_of(tenant)
+            * self._link_rate(t.src_node, t.dst_node)
+        )
         start = max(
             t.not_before,
             self.send_free.get(t.src_node, 0.0),
@@ -386,6 +434,11 @@ class NetSimulator:
 
     # -- quantum: weighted-fair preemptive sharing ----------------------------
     def _transfer_quantum(self, t: Transfer, tenant) -> tuple[float, float, float]:
+        if self._node_rate:
+            s_f = self._node_rate.get(("s", t.src_node), 1.0)
+            r_f = self._node_rate.get(("r", t.dst_node), 1.0)
+            if min(s_f, r_f) < 1.0:
+                return self._transfer_degraded(t, tenant, s_f, r_f)
         bw = self.profile.node_bandwidth
         share = self.weight_of(tenant)
         src = self._send.setdefault(t.src_node, _PortTimeline())
@@ -461,6 +514,81 @@ class NetSimulator:
                 self._fw_send_end.get(t.src_node, 0.0), end
             )
         return end, busy, first_start
+
+    # -- degraded (fail-slow) paths -------------------------------------------
+    def _transfer_degraded(
+        self, t: Transfer, tenant, s_f: float, r_f: float
+    ) -> tuple[float, float, float]:
+        """Gray-path scheduling: one contiguous reservation at the
+        bottleneck rate ``min(s_f, r_f)``. The bottleneck side's port is
+        saturated for the whole stretched duration; the HEALTHY side is
+        only busy for its own wire time, anchored at the transfer's END
+        (in-order delivery: the receiver hands the object off at
+        last-byte time). A stream trickling in from a fail-slow sender
+        must not head-of-line block the receiver's NIC — otherwise every
+        hedged alternate fetch would queue behind the very transfer it
+        is racing, and fail-slow would be indistinguishable from
+        receiver congestion.
+
+        Weighted-fair quantum interleaving is bypassed on the stretched
+        reservation: the trickle runs far below the port's healthy
+        capacity, so spacing it against healthy tenants' quanta would
+        model contention it does not cause. Later transfers preempt into
+        the healthy-side head hole through the normal gap search."""
+        bw = self.profile.node_bandwidth
+        share = self.weight_of(tenant)
+        rate = min(s_f, r_f)
+        src = self._send.setdefault(t.src_node, _PortTimeline())
+        dst = self._recv.setdefault(t.dst_node, _PortTimeline())
+        cursors = self._class_cursor
+        ck_s = ("s", t.src_node, tenant)
+        ck_r = ("r", t.dst_node, tenant)
+        earliest = max(
+            t.not_before, cursors.get(ck_s, 0.0), cursors.get(ck_r, 0.0)
+        )
+        dur = t.nbytes / (bw * rate * share)
+        if s_f <= r_f:
+            bneck, other = src, dst
+            o_busy = t.nbytes / (bw * r_f)
+        else:
+            bneck, other = dst, src
+            o_busy = t.nbytes / (bw * s_f)
+        # joint placement: full stretched hole on the bottleneck port,
+        # tail slice on the healthy port; each miss pushes the search
+        # strictly later, so the loop terminates like _find_gap's
+        probe = earliest
+        while True:
+            b_start, _ = bneck.next_gap(probe, dur)
+            end = b_start + dur
+            o_start, _ = other.next_gap(max(0.0, end - o_busy), o_busy)
+            if o_start <= end - o_busy + 1e-9:
+                break
+            probe = max(o_start + o_busy - dur, b_start + 1e-9)
+        bneck.occupy(b_start, end)
+        other.occupy(end - o_busy, end)
+        # the tail-anchored occupation leaves a real hole on the healthy
+        # port: flip chunked scheduling on so full-weight transfers can
+        # preempt into it instead of skipping it
+        self._seen_throttled = True
+        # eligibility cursors: the bottleneck side is saturated until the
+        # stretched end, so its cursor re-anchors there like any full
+        # reservation; the healthy side only consumed its wire time, and
+        # flooring ITS cursor at the stretched end would let the trickle
+        # head-of-line block the tenant's other traffic through the back
+        # door the occupation hole just opened
+        if bneck is src:
+            cursors[ck_s] = max(cursors.get(ck_s, 0.0) + dur / share, end)
+            cursors[ck_r] = cursors.get(ck_r, 0.0) + o_busy / share
+        else:
+            cursors[ck_r] = max(cursors.get(ck_r, 0.0) + dur / share, end)
+            cursors[ck_s] = cursors.get(ck_s, 0.0) + o_busy / share
+        self.send_free[t.src_node] = max(self.send_free.get(t.src_node, 0.0), end)
+        self.recv_free[t.dst_node] = max(self.recv_free.get(t.dst_node, 0.0), end)
+        if share == 1.0:
+            self._fw_send_end[t.src_node] = max(
+                self._fw_send_end.get(t.src_node, 0.0), end
+            )
+        return end, dur, b_start
 
     @staticmethod
     def _find_gap(

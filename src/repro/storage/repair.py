@@ -132,6 +132,45 @@ class PacingController:
 
 
 @dataclass
+class Scrubber:
+    """Background integrity scrubber: walks the store's blocks at a paced
+    rate recomputing checksums, so LATENT corruption (a bit flip nobody
+    has read yet) is found and queued for repair before a foreground GET
+    trips over it — the proactive half of the corruption-as-erasure
+    plane (the reactive half is the gateway's fetch-time verify).
+
+    Pure detection: ``scan`` verifies up to ``budget`` blocks from a
+    persistent cursor (round-robin over the key space, wrapping) and
+    returns the keys that failed — the owner decides quarantine/repair.
+    The per-tick budget is the pacing surface: the gateway multiplies
+    ``blocks_per_run`` by the ``PacingController`` share, so scrubbing
+    backs off exactly like repair when foreground SLOs are at risk."""
+
+    store: BlockStore
+    blocks_per_run: int = 64
+    scanned: int = 0
+    found: int = 0
+    _cursor: int = 0
+
+    def scan(self, budget: int | None = None) -> list:
+        budget = self.blocks_per_run if budget is None else int(budget)
+        keys = sorted(self.store.blocks.keys())
+        if not keys or budget <= 0:
+            return []
+        budget = min(budget, len(keys))
+        bad = []
+        start = self._cursor % len(keys)
+        for i in range(budget):
+            key = keys[(start + i) % len(keys)]
+            self.scanned += 1
+            if not self.store.verify(key):
+                bad.append(key)
+        self._cursor = (start + budget) % len(keys)
+        self.found += len(bad)
+        return bad
+
+
+@dataclass
 class BlockFixer:
     store: BlockStore
     code: CoreCode

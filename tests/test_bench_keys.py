@@ -7,10 +7,13 @@ test pins the key set from PR 2 (throughput / latency / amplification /
 pipelined-vs-serial / p99-under-repair), the PR 3 multi-tenant block
 (gateway_tenants), the PR 4 fault-scenario block (gateway_scenario:
 paced-vs-fixed repair p99/MTTR plus durability counters), the PR 5
-megakernel block, and the PR 6 observability block (gateway_obs:
-tracing overhead + stage attribution + bounded long-trace), and skips
-cleanly when the snapshot has not been generated in this checkout
-(e.g. a fresh clone running only the unit suite).
+megakernel block, the PR 6 observability block (gateway_obs: tracing
+overhead + stage attribution + bounded long-trace), and the PR 7
+gray-failure block (gateway_integrity: hedged-vs-unhedged p99 under
+fail-slow, the structural extra-byte budget, and corruption-as-erasure
+detection/repair counters), and skips cleanly when the snapshot has
+not been generated in this checkout (e.g. a fresh clone running only
+the unit suite).
 """
 
 from __future__ import annotations
@@ -39,6 +42,7 @@ TOP_LEVEL_KEYS = {
     "gateway_scenario",
     "gateway_megakernel",
     "gateway_obs",
+    "gateway_integrity",
 }
 
 PIPELINE_KEYS = {
@@ -104,6 +108,23 @@ OBS_STAGES = {
     "engine_wait",
     "decode",
     "deliver",
+}
+
+# PR-7 gray-failure block: hedged degraded reads under fail-slow plus
+# the corruption-as-erasure integrity plane.
+INTEGRITY_KEYS = {
+    "p99_fail_slow_ms",
+    "hedge_launched",
+    "hedge_wins",
+    "hedge_losses",
+    "extra_fabric_ratio",
+    "corruption_injected",
+    "corruption_detected",
+    "detected_by_read",
+    "detected_by_scrub",
+    "mttd_s",
+    "corrupt_blocks_repaired",
+    "wrong_bytes_served",
 }
 
 
@@ -212,6 +233,31 @@ def test_gateway_obs_values_sane(bench):
     assert lt["requests"] >= 2000
     assert lt["records_resident"] == 0
     assert lt["resident_samples"] < 50_000
+
+
+def test_gateway_integrity_keys(bench):
+    integ = bench["gateway_integrity"]
+    missing = INTEGRITY_KEYS - set(integ)
+    assert not missing, f"gateway_integrity lost stable keys: {sorted(missing)}"
+    assert {"unhedged", "hedged", "improvement"} <= set(
+        integ["p99_fail_slow_ms"]
+    )
+
+
+def test_gateway_integrity_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): zero wrong bytes ever served,
+    hedging beats the unhedged baseline inside the structural 5%
+    extra-byte budget, and every detected corruption was repaired."""
+    integ = bench["gateway_integrity"]
+    assert integ["wrong_bytes_served"] == 0
+    p99 = integ["p99_fail_slow_ms"]
+    assert p99["hedged"] < p99["unhedged"]
+    assert integ["hedge_wins"] > 0
+    assert 0.0 <= integ["extra_fabric_ratio"] <= 0.05
+    assert integ["corruption_detected"] > 0
+    assert integ["corrupt_blocks_repaired"] == integ["corruption_detected"]
+    assert integ["mttd_s"] >= 0.0
 
 
 def test_gateway_tenants_values_sane(bench):

@@ -27,7 +27,12 @@ gray-failure rows (gateway_integrity): hedged vs unhedged degraded
 reads against a fail-slow node (p99 + the structural extra-byte budget)
 and a corruption + fail-slow scenario exercising the corruption-as-
 erasure plane (read/scrub detection, MTTD, repair heal, zero wrong
-bytes served).
+bytes served). The code-family bake-off rows (gateway_bakeoff): RS vs
+CORE vs LRC through the same gateway, workload and shared
+Weibull-interarrival fault trace — per-family repair bandwidth, repair
+time, degraded p99 and storage overhead, gating CORE <= 0.55x RS
+repair traffic on single-node failure and clean-path byte identity
+across families.
 
 Results land in BENCH_gateway.json (stable keys) so the perf trajectory
 is tracked across PRs — benchmarks/run.py writes it on every --fast run.
@@ -250,6 +255,7 @@ def run(fast: bool = True) -> list[dict]:
     rows.extend(_run_scenario_rows(code, num_nodes, fast))
     rows.extend(_run_obs_rows(code, fast))
     rows.extend(_run_integrity_rows(fast))
+    rows.extend(_run_bakeoff_rows(fast))
     return rows
 
 
@@ -840,6 +846,127 @@ def _run_integrity_rows(fast: bool) -> list[dict]:
     return rows
 
 
+def _run_bakeoff_rows(fast: bool) -> list[dict]:
+    """Code-family bake-off rows (bench="gateway_bakeoff"): RS vs CORE
+    vs LRC through the SAME gateway, workload, and fault trace — the
+    paper's Table-1/Section-6 comparison measured inside our fabric.
+
+    Every family shares one CoreCode(9, 6, 3) shape: CORE stripes the
+    full (t+1, n) product code, RS/LRC stripe single (n, k) rows derived
+    from it, so the data geometry (k data blocks per object) is held
+    fixed and only the parity structure differs. Two runs per family:
+
+    - clean: no faults, record_payloads=True — the three families must
+      serve byte-identical payload digests per object (the bake-off is
+      meaningless if the codes disagree on the data).
+    - faulted: a SHARED Weibull-interarrival scenario trace (the bursty
+      shape<1 churn of the warehouse-cluster study, 1309.0186) bounded
+      at max_concurrent_failures=1 — the single-node-failure regime of
+      the paper's 50%-repair-bandwidth claim. Repair traffic, repair
+      time, and degraded p99 come from this run.
+
+    The headline metric is repair fetch blocks PER REPAIRED BLOCK, not
+    raw bytes: per-family placement differs (a CORE group spans
+    (t+1)*n blocks, an RS/LRC group n), so per-lost-block cost is the
+    comparable — and deterministic — surface: CORE repairs verticals at
+    t=3, RS always re-decodes k=6, LRC fetches its k/2=3 local group.
+    """
+    code = CoreCode(9, 6, 3)  # even k and n >= k+2: valid for all 3 families
+    num_nodes, q, num_objects = 60, 4096, 30
+    num_requests = 240 if fast else 600
+    rows = []
+
+    # one fault trace shared by every family: Weibull inter-arrivals
+    # (shape 0.7 — bursty), transient crashes for degraded reads plus
+    # permanent capacity losses for repair traffic, never more than one
+    # node down at a time
+    scfg = ScenarioConfig(
+        duration=0.5,
+        num_nodes=num_nodes,
+        nodes_per_rack=3,
+        max_concurrent_failures=1,
+        crash_rate=10.0,
+        mean_downtime=0.08,
+        transient_fraction=0.75,
+        interarrival="weibull",
+        interarrival_shape=0.7,
+        seed=29,
+    )
+    trace = generate_scenario(scfg)
+    fault_events = sum(
+        1 for ev in trace.events
+        if type(ev).__name__ in ("FailureEvent", "CapacityLossEvent")
+    )
+
+    clean_wl = WorkloadConfig(
+        num_objects=num_objects,
+        num_requests=max(60, num_requests // 4),
+        arrival_rate=500.0,
+        seed=31,
+    )
+    faulted_wl = WorkloadConfig(
+        num_objects=num_objects,
+        num_requests=num_requests,
+        arrival_rate=400.0,
+        seed=29,
+    )
+
+    for fam in ("core", "rs", "lrc"):
+        # -- clean path: byte identity across families ------------------------
+        gw = _mk_gateway(
+            code, num_nodes, q, num_objects, seed=31,
+            code_family=fam, record_payloads=True, batch_window=0.01,
+        )
+        clean_rep = gw.serve(generate_requests(clean_wl), [])
+        digests = sorted(
+            {
+                (r.object_id, r.payload_digest)
+                for r in clean_rep.completed
+                if r.kind == "get" and r.payload_digest
+            }
+        )
+
+        # -- faulted path: shared trace, repair + degraded reads ---------------
+        gw = _mk_gateway(
+            code, num_nodes, q, num_objects, seed=29,
+            code_family=fam, batch_window=0.01,
+            repair_on_failure=True, repair_delay=0.02,
+        )
+        res = run_scenario(gw, trace, faulted_wl)
+        rep = res.report
+        fetched = sum(r.blocks_fetched for r in rep.repair_reports)
+        repaired = sum(r.blocks_repaired for r in rep.repair_reports)
+        repair_time = sum(r.total_time for r in rep.repair_reports)
+        rows.append(
+            {
+                "bench": "gateway_bakeoff",
+                "family": fam,
+                "k": code.k,
+                "requests": len(rep.records),
+                "completed": len(rep.completed),
+                "degraded_gets": len(rep.degraded_gets),
+                "p99_ms": round(rep.latency_percentile(99) * 1e3, 3),
+                "clean_requests": len(clean_rep.records),
+                "clean_completed": len(clean_rep.completed),
+                "clean_digests": digests,
+                "fault_events": fault_events,
+                "repairs": len(rep.repair_reports),
+                "repair_blocks_fetched": fetched,
+                "repair_bytes": sum(r.bytes_fetched for r in rep.repair_reports),
+                "repair_blocks_repaired": repaired,
+                "fetch_per_repaired": round(fetched / max(repaired, 1), 3),
+                "repair_time_per_block_ms": round(
+                    repair_time / max(repaired, 1) * 1e3, 4
+                ),
+                "storage_overhead": round(gw.family.storage_overhead, 4),
+                "tolerance": gw.family.tolerance,
+                "blocks_lost": res.blocks_lost,
+                "missing_blocks_end": int(res.durability["missing_blocks"]),
+            }
+        )
+    return rows
+
+
 def bench_summary(rows: list[dict]) -> dict:
     """Machine-readable perf snapshot with stable keys (BENCH_gateway.json)."""
     main = {r["failed_nodes"]: r for r in rows if r["bench"] == "gateway_load"}
@@ -884,6 +1011,7 @@ def bench_summary(rows: list[dict]) -> dict:
         "gateway_scenario": _scenario_summary(rows),
         "gateway_obs": _obs_summary(rows),
         "gateway_integrity": _integrity_summary(rows),
+        "gateway_bakeoff": _bakeoff_summary(rows),
         "jit_cache_entries": max(r.get("jit_entries", 0) for r in rows),
         # winners only — raw sweep timings are measurement noise and
         # would churn this committed file on every run
@@ -1051,6 +1179,49 @@ def _integrity_summary(rows: list[dict]) -> dict:
         "wrong_bytes_served": un["wrong_bytes_served"]
         + he["wrong_bytes_served"]
         + gb["wrong_bytes_served"],
+    }
+
+
+def _bakeoff_summary(rows: list[dict]) -> dict:
+    """The gateway_bakeoff block of BENCH_gateway.json (stable keys):
+    per-family repair bandwidth / repair time / degraded p99 / storage
+    overhead under the shared Weibull fault trace, the CORE-vs-RS and
+    LRC-vs-RS repair ratios (the paper's 50%-bandwidth claim), and the
+    clean-path byte-identity bit. Ratios use fetch blocks per repaired
+    block — the placement-independent repair-bandwidth surface."""
+    bk = {r["family"]: r for r in rows if r["bench"] == "gateway_bakeoff"}
+    core, rs, lrc = bk["core"], bk["rs"], bk["lrc"]
+    fams = ("core", "rs", "lrc")
+    identical = (
+        len(core["clean_digests"]) > 0
+        and core["clean_digests"] == rs["clean_digests"] == lrc["clean_digests"]
+    )
+    return {
+        "families": list(fams),
+        "fault_events": core["fault_events"],
+        "repair_blocks_per_lost": {
+            f: bk[f]["fetch_per_repaired"] for f in fams
+        },
+        "repair_bytes": {f: bk[f]["repair_bytes"] for f in fams},
+        "repair_time_per_block_ms": {
+            f: bk[f]["repair_time_per_block_ms"] for f in fams
+        },
+        "degraded_p99_ms": {f: bk[f]["p99_ms"] for f in fams},
+        "storage_overhead": {f: bk[f]["storage_overhead"] for f in fams},
+        "tolerance": {f: bk[f]["tolerance"] for f in fams},
+        "core_vs_rs_repair_ratio": round(
+            core["fetch_per_repaired"] / max(rs["fetch_per_repaired"], 1e-9), 4
+        ),
+        "lrc_vs_rs_repair_ratio": round(
+            lrc["fetch_per_repaired"] / max(rs["fetch_per_repaired"], 1e-9), 4
+        ),
+        "core_vs_rs_repair_time_ratio": round(
+            core["repair_time_per_block_ms"]
+            / max(rs["repair_time_per_block_ms"], 1e-9),
+            4,
+        ),
+        "clean_path_identical": identical,
+        "blocks_lost": sum(bk[f]["blocks_lost"] for f in fams),
     }
 
 
@@ -1295,6 +1466,43 @@ def check(rows: list[dict]) -> list[str]:
         f"{integ['corruption_injected']} injected, MTTD "
         f"{integ['mttd_s'] * 1e3:.0f} ms), 0 wrong bytes served "
         f"({'PASS' if integ_ok else 'FAIL'})"
+    )
+    # code-family bake-off: CORE repair bandwidth <= 0.55x RS on
+    # single-node failure under the shared Weibull fault trace — the
+    # paper's 50%-less-repair-traffic claim, measured in our fabric
+    bak = _bakeoff_summary(rows)
+    blk = bak["repair_blocks_per_lost"]
+    ratio_ok = (
+        0 < bak["core_vs_rs_repair_ratio"] <= 0.55
+        and bak["fault_events"] > 0
+        and bak["blocks_lost"] == 0
+    )
+    msgs.append(
+        f"gateway: CORE repair bandwidth <= 0.55x RS on single-node "
+        f"failure (core {blk['core']:.1f} vs rs {blk['rs']:.1f} "
+        f"fetch/blk, {bak['core_vs_rs_repair_ratio']:.2f}x over "
+        f"{bak['fault_events']} fault events) "
+        f"({'PASS' if ratio_ok else 'FAIL'})"
+    )
+    # LRC sits between: local groups fetch fewer than the RS k-block
+    # re-decode, but never beat CORE's vertical t
+    lrc_ok = blk["lrc"] < blk["rs"]
+    msgs.append(
+        f"gateway: LRC local-group repair beats the RS k-block fetch "
+        f"(lrc {blk['lrc']:.1f} < rs {blk['rs']:.1f} fetch/blk) "
+        f"({'PASS' if lrc_ok else 'FAIL'})"
+    )
+    # all three families serve byte-identical payloads on the clean path
+    bak_rows = [r for r in rows if r["bench"] == "gateway_bakeoff"]
+    served_ok = bak["clean_path_identical"] and all(
+        r["completed"] == r["requests"]
+        and r["clean_completed"] == r["clean_requests"]
+        for r in bak_rows
+    )
+    msgs.append(
+        f"gateway: all 3 families serve byte-identical payloads "
+        f"({len(bak_rows[0]['clean_digests'])} digests compared, all "
+        f"requests served) ({'PASS' if served_ok else 'FAIL'})"
     )
     return msgs
 

@@ -49,6 +49,15 @@ erasures (quarantine + tombstone + repair), and every GET still
 returns digest-verified bytes — the demo prints detection split, MTTD,
 hedge accounting, and the wrong-bytes-served count (always 0).
 
+Code-family bake-off (--bakeoff): the paper's comparison, live — the
+SAME objects, workload, and Weibull-interarrival fault trace served
+three times with the per-namespace code family switched between RS
+(the traditional-EC baseline), CORE (the product code), and LRC
+(Azure-style local reconstruction groups). The demo prints per-family
+repair traffic (fetch blocks per repaired block: CORE verticals at t,
+RS at k, LRC local groups at k/2), repair time, degraded p99, storage
+overhead, and the CORE-vs-RS repair ratio the paper claims at ~0.5x.
+
 Sim-time tracing (--trace out.json): the same serve with the
 observability plane on — every request becomes a trace of spans over
 the SIMULATED clock, exported as chrome-tracing JSON that opens
@@ -87,6 +96,7 @@ stage shares the gateway_obs benchmark reports.
     PYTHONPATH=src python examples/gateway_serving.py --tenants
     PYTHONPATH=src python examples/gateway_serving.py --scenario
     PYTHONPATH=src python examples/gateway_serving.py --graybox
+    PYTHONPATH=src python examples/gateway_serving.py --bakeoff
     PYTHONPATH=src python examples/gateway_serving.py --trace out.json
 """
 
@@ -406,6 +416,64 @@ def main_graybox():
           f"{audit['missing_blocks']} still missing after repair")
 
 
+def main_bakeoff():
+    """Code-family bake-off demo: RS vs CORE vs LRC through the same
+    gateway, objects, workload, and Weibull fault trace (the same setup
+    the gateway_bakeoff benchmark block gates)."""
+    code = CoreCode(9, 6, 3)  # even k, n >= k+2: valid for all 3 families
+    q, num_objects, num_nodes = 4096, 30, 60
+
+    scfg = ScenarioConfig(
+        duration=0.5,
+        num_nodes=num_nodes,
+        nodes_per_rack=3,
+        max_concurrent_failures=1,  # the paper's single-node-failure regime
+        crash_rate=10.0,
+        mean_downtime=0.08,
+        transient_fraction=0.75,
+        interarrival="weibull",     # bursty warehouse-cluster churn
+        interarrival_shape=0.7,
+        seed=29,
+    )
+    trace = generate_scenario(scfg)
+    wl = WorkloadConfig(
+        num_objects=num_objects, num_requests=240, arrival_rate=400.0, seed=29
+    )
+    print(f"shared shape ({code.n},{code.k},{code.t}), {num_nodes} nodes, "
+          f"{len(trace.fault_events())} fault events (Weibull shape "
+          f"{scfg.interarrival_shape}, never >1 node down), same workload "
+          f"for every family")
+    print(f"\n  {'family':>8s} {'fetch/blk':>10s} {'repair ms/blk':>14s} "
+          f"{'p99 ms':>8s} {'overhead':>9s} {'tolerance':>10s}")
+    fetch_per = {}
+    for fam in ("rs", "core", "lrc"):
+        cfg = GatewayConfig(
+            code_family=fam, batch_window=0.01,
+            repair_on_failure=True, repair_delay=0.02,
+        )
+        gw = ObjectGateway(
+            code, ClusterProfile.network_critical(), num_nodes, cfg
+        )
+        rng = np.random.default_rng(29)
+        gw.load_objects(
+            rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8)
+        )
+        res = run_scenario(gw, trace, wl)
+        rep = res.report
+        fetched = sum(r.blocks_fetched for r in rep.repair_reports)
+        repaired = max(sum(r.blocks_repaired for r in rep.repair_reports), 1)
+        rtime = sum(r.total_time for r in rep.repair_reports)
+        fetch_per[fam] = fetched / repaired
+        print(f"  {fam:>8s} {fetch_per[fam]:10.2f} "
+              f"{rtime / repaired * 1e3:14.2f} "
+              f"{rep.latency_percentile(99) * 1e3:8.2f} "
+              f"{gw.family.storage_overhead:9.2f} "
+              f"{gw.family.tolerance:10d}")
+    print(f"\n  CORE repair traffic = {fetch_per['core'] / fetch_per['rs']:.2f}x "
+          f"RS (paper claims ~0.5x); LRC = "
+          f"{fetch_per['lrc'] / fetch_per['rs']:.2f}x")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--tenants", action="store_true",
@@ -415,11 +483,16 @@ if __name__ == "__main__":
     ap.add_argument("--graybox", action="store_true",
                     help="gray-failure demo (corruption-as-erasure, "
                          "fail-slow injection, hedged degraded reads)")
+    ap.add_argument("--bakeoff", action="store_true",
+                    help="code-family bake-off demo (RS vs CORE vs LRC "
+                         "under the same workload and fault trace)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="run the default demo with sim-time tracing and "
                          "export a Perfetto/chrome-tracing JSON file")
     args = ap.parse_args()
-    if args.graybox:
+    if args.bakeoff:
+        main_bakeoff()
+    elif args.graybox:
         main_graybox()
     elif args.scenario:
         main_scenario()

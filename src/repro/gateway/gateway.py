@@ -118,6 +118,7 @@ from repro.gateway.planner import (
     DegradedReadPlanner,
     ReadPlan,
     UnreadableObjectError,
+    make_family,
 )
 from repro.gateway.workload import (
     CapacityLossEvent,
@@ -246,6 +247,14 @@ class GatewayConfig:
     # (records stays empty; aggregates come from the bounded metrics
     # registry) so resident memory is O(1) in trace length
     record_requests: bool = True
+    # -- code family (per-namespace property) ----------------------------------
+    # "core" (the (n,k,t) product code, default), "rs" (plain (n,k)
+    # Reed-Solomon rows — the paper's traditional-EC baseline), or "lrc"
+    # ((n,k) Azure-style Local Reconstruction Code rows). RS/LRC derive
+    # (n,k) from the gateway's CoreCode so all families stripe the same
+    # row geometry; planner candidates, repair plans, PUT re-encode, and
+    # the durability audit all go through repro.gateway.planner.CodeFamily.
+    code_family: str = "core"
 
 
 @dataclass
@@ -553,6 +562,9 @@ class ObjectGateway:
         self.codec = CoreCodec(code)
         self.profile = profile
         self.config = config or GatewayConfig()
+        # the namespace's code family: geometry + encode + degraded-read
+        # candidates + repair cost surface (raises on unknown names)
+        self.family = make_family(code, self.config.code_family)
         if self.config.pipeline not in (PIPELINED, SERIAL):
             raise ValueError(
                 f"pipeline must be 'pipelined' or 'serial', got "
@@ -649,7 +661,7 @@ class ObjectGateway:
             else None
         )
         self.planner = DegradedReadPlanner(
-            self.store, code, available_fn=self._available
+            self.store, code, available_fn=self._available, family=self.family
         )
         self.coalescer = DecodeCoalescer(
             compute_scale=profile.compute_scale,
@@ -665,6 +677,7 @@ class ObjectGateway:
             sim=self.sim,
             priority=REPAIR_TENANT,
             on_block_repaired=self._on_block_repaired,
+            family=self.family,
         )
         self.fixer.tracer = self.tracer
         self._objects: dict[int, tuple[str, int]] = {}  # object -> (group, row)
@@ -789,20 +802,21 @@ class ObjectGateway:
 
     # -- bulk load (trace setup; not metered on the fabric) --------------------
     def load_objects(self, objects: np.ndarray) -> None:
-        """objects: (num_objects, k, q) uint8. Packs t objects per CORE
-        group (zero-padding the last group) and places all groups."""
+        """objects: (num_objects, k, q) uint8. Packs objects_per_group
+        objects per group (t for CORE, 1 for the row families, zero-
+        padding the last group) and places all groups."""
         num, k, q = objects.shape
         if k != self.code.k:
             raise ValueError(f"objects must have k={self.code.k} blocks")
         self._block_bytes = int(q)
-        t = self.code.t
+        t = self.family.objects_per_group
         for g0 in range(0, num, t):
             chunk = objects[g0 : g0 + t]
             if chunk.shape[0] < t:
                 pad = np.zeros((t - chunk.shape[0], k, q), dtype=np.uint8)
                 chunk = np.concatenate([chunk, pad], axis=0)
             gid = f"g{g0 // t}"
-            matrix = np.asarray(self.codec.encode(chunk))
+            matrix = np.asarray(self.family.encode_group(chunk))
             self.store.put_group(gid, matrix)
             members = []
             for r in range(min(t, num - g0)):
@@ -1050,7 +1064,7 @@ class ObjectGateway:
             # Replan loop: terminates because every corruption detection
             # permanently quarantines a source (the replan never picks it
             # again); the attempt cap is pure defense in depth.
-            for _attempt in range(self.code.n * self.code.rows + 1):
+            for _attempt in range(self.code.n * self.family.rows + 1):
                 corrupt: list[tuple[BlockKey, float]] = []
                 stale = False
                 # direct fetches eligible to hedge; the DECISION is
@@ -1685,9 +1699,14 @@ class ObjectGateway:
 
     # -- PUT --------------------------------------------------------------------
     def _handle_put(self, req: Request, report: GatewayReport) -> RequestRecord:
-        """Overwrite one object (one CORE row) in place: re-encode the row
-        RS codeword and XOR-delta the vertical parity row (linearity of
-        both codes — no other row is touched).
+        """Overwrite one object (one group row) in place.
+
+        CORE: re-encode the row RS codeword and XOR-delta the vertical
+        parity row (linearity of both codes — no other row is touched).
+        Row families (rs / lrc, rows == 1): the object IS the whole
+        codeword row, so the overwrite re-encodes all n blocks through
+        the family's generator and there is no vertical parity to
+        reconcile.
 
         The parity read-modify-write verifies the stored parity digest
         BEFORE folding the delta in: XOR-ing into silently-corrupt bytes
@@ -1705,20 +1724,25 @@ class ObjectGateway:
         tid = tracer.begin_trace() if tracer.enabled else 0
         rng = np.random.default_rng((oid * 1_000_003 + int(req.time * 1e6)) % (2**63))
         new_data = rng.integers(0, 256, (self.code.k, q), dtype=np.uint8)
-        new_row = np.asarray(self.code.horizontal.encode(new_data))  # (n, q)
-        # Delta against the re-encoded OLD row (ground truth), not the
-        # stored block — a lost old block must still contribute its delta
-        # or the vertical parity goes stale for the whole column.
-        old_row = np.asarray(self.code.horizontal.encode(self._expected[oid]))
+        has_parity = self.family.rows > 1
+        if has_parity:
+            new_row = np.asarray(self.code.horizontal.encode(new_data))  # (n, q)
+            # Delta against the re-encoded OLD row (ground truth), not the
+            # stored block — a lost old block must still contribute its
+            # delta or the vertical parity goes stale for the whole column.
+            old_row = np.asarray(self.code.horizontal.encode(self._expected[oid]))
+        else:
+            new_row = np.asarray(self.family.encode_group(new_data[None]))[0]
+            old_row = None
         client = self._client_port(req)
         nbytes = 0
         done = req.time
-        parity_row = self.code.rows - 1
+        parity_row = self.family.rows - 1
         for c in range(self.code.n):
             old_key = (gid, row, c)
             par_key = (gid, parity_row, c)
             # a lost parity column is reconciled later by repair instead
-            par_ok = self.store.available(par_key)
+            par_ok = has_parity and self.store.available(par_key)
             if (
                 par_ok
                 and self.config.verify_checksums
@@ -1948,7 +1972,7 @@ class ObjectGateway:
         if backlog <= 0.0:
             return 0.0
         serialization = (
-            (self.code.k + self.code.t)
+            self.family.degraded_fetch_blocks
             * self._block_bytes
             / self.profile.node_bandwidth
         )
@@ -1965,7 +1989,7 @@ class ObjectGateway:
         for gid in self._groups:
             missing = [
                 (gid, r, c)
-                for r in range(self.code.rows)
+                for r in range(self.family.rows)
                 for c in range(self.code.n)
                 if not self.store.available((gid, r, c))
             ]
@@ -1980,7 +2004,7 @@ class ObjectGateway:
                 # fresh digest over wrong bytes)
                 bad = [
                     (gid, r, c)
-                    for r in range(self.code.rows)
+                    for r in range(self.family.rows)
                     for c in range(self.code.n)
                     if (gid, r, c) in self.store.blocks
                     and not self.store.verify((gid, r, c))
@@ -2120,12 +2144,20 @@ class ObjectGateway:
         missing_blocks = 0
         blocks_lost = 0
         for gid in self._groups:
-            fm = self.store.failure_matrix(gid, self.code.rows, self.code.n)
+            fm = self.store.failure_matrix(gid, self.family.rows, self.code.n)
             missing_blocks += int(fm.sum())
-            for cluster in independent_clusters(fm):
-                if not is_recoverable(self.code, cluster):
-                    blocks_lost += int(cluster.sum())
-        store_planner = DegradedReadPlanner(self.store, self.code)
+            if self.family.name == "core":
+                for cluster in independent_clusters(fm):
+                    if not is_recoverable(self.code, cluster):
+                        blocks_lost += int(cluster.sum())
+            elif not self.family.group_recoverable(
+                lambda rc, g=gid: self.store.available((g, rc[0], rc[1]))
+            ):
+                missing_blocks_in_group = int(fm.sum())
+                blocks_lost += missing_blocks_in_group
+        store_planner = DegradedReadPlanner(
+            self.store, self.code, family=self.family
+        )
         unreadable = 0
         for oid, (gid, row) in self._objects.items():
             try:

@@ -31,6 +31,7 @@ so a failing seed can be committed as a regression fixture.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
 
 import numpy as np
@@ -311,9 +312,21 @@ class ScenarioConfig:
     # the hard tolerance bound: concurrently-affected nodes never exceed
     # this (pass the code's n - k for always-recoverable traces)
     max_concurrent_failures: int = 2
-    crash_rate: float = 1.0  # background node crashes (Poisson)
+    crash_rate: float = 1.0  # background node crashes (1/mean interarrival)
     mean_downtime: float = 0.5  # exponential transient downtime
     transient_fraction: float = 0.75  # rest are capacity losses
+    # Crash inter-arrival law. "exponential" (default) is the Poisson
+    # assumption; "weibull" draws Weibull(interarrival_shape) gaps —
+    # shape < 1 gives the bursty, heavy-tailed churn the warehouse-
+    # cluster failure study measures (Rashmi et al., 1309.0186: most
+    # failures arrive in correlated bursts, not as a memoryless
+    # process) — and "trace" resamples the empirical gap samples in
+    # ``interarrival_samples`` (seconds). All three laws preserve
+    # ``crash_rate`` as 1/mean, so tolerance-bound admission pressure is
+    # comparable across laws; only the clustering changes.
+    interarrival: str = "exponential"  # "exponential" | "weibull" | "trace"
+    interarrival_shape: float = 0.7  # Weibull shape (k < 1 = bursty)
+    interarrival_samples: tuple = ()  # empirical gaps for "trace"
     rack_burst_times: tuple = ()  # correlated bursts at these times
     rack_downtime: float = 0.5
     flap_nodes: int = 0
@@ -327,6 +340,34 @@ class ScenarioConfig:
     mean_slow_time: float = 0.5  # exponential slow-episode length
     surges: tuple = ()  # LoadSurge passthrough
     seed: int = 0
+
+
+def _crash_gap(rng: np.random.Generator, cfg: ScenarioConfig) -> float:
+    """One crash inter-arrival draw under the configured law, with mean
+    1/crash_rate in every mode (the Weibull scale is mean/Γ(1 + 1/k), so
+    changing the law changes burstiness, not total churn)."""
+    mean = 1.0 / cfg.crash_rate
+    if cfg.interarrival == "exponential":
+        return float(rng.exponential(mean))
+    if cfg.interarrival == "weibull":
+        shape = cfg.interarrival_shape
+        if shape <= 0:
+            raise ValueError(f"interarrival_shape must be > 0, got {shape}")
+        scale = mean / math.gamma(1.0 + 1.0 / shape)
+        return float(scale * rng.weibull(shape))
+    if cfg.interarrival == "trace":
+        samples = np.asarray(cfg.interarrival_samples, dtype=np.float64)
+        if samples.size == 0 or np.any(samples <= 0):
+            raise ValueError(
+                "interarrival='trace' needs positive interarrival_samples"
+            )
+        # resample the empirical distribution, rescaled to the configured
+        # mean so crash_rate stays the single churn knob
+        return float(rng.choice(samples) * (mean / samples.mean()))
+    raise ValueError(
+        f"unknown interarrival law {cfg.interarrival!r} "
+        "(want 'exponential', 'weibull' or 'trace')"
+    )
 
 
 def generate_scenario(cfg: ScenarioConfig) -> ScenarioTrace:
@@ -345,7 +386,7 @@ def generate_scenario(cfg: ScenarioConfig) -> ScenarioTrace:
 
     t = 0.0
     while cfg.crash_rate > 0:
-        t += float(rng.exponential(1.0 / cfg.crash_rate))
+        t += _crash_gap(rng, cfg)
         if t >= cfg.duration:
             break
         node = int(rng.integers(cfg.num_nodes))

@@ -197,6 +197,11 @@ class BlockFixer:
     # into that trace. Observation-only.
     tracer: object = None
     trace_ctx: tuple | None = None
+    # Code family (repro.gateway.planner.CodeFamily). None or a "core"
+    # family keeps the product-code modes above; a row family ("rs" /
+    # "lrc") repairs through the family's repair_plan — LRC local steps
+    # fetch ONLY the local group (k/2 survivors), not k blocks.
+    family: object = None
 
     def __post_init__(self):
         self.codec = CoreCodec(self.code)
@@ -252,12 +257,109 @@ class BlockFixer:
     # -- main entry ------------------------------------------------------------
     def fix_group(self, group_id: str, rows: int | None = None) -> RepairReport:
         """Detect and repair all missing blocks of a group."""
+        self._timed = 0.0
+        if (
+            self.family is not None
+            and getattr(self.family, "name", "core") != "core"
+        ):
+            return self._fix_family(group_id)
         rows = rows if rows is not None else self.code.rows
         cols = self.code.n
-        self._timed = 0.0
         if self.mode == "core":
             return self._fix_core(group_id, rows, cols)
         return self._fix_raid(group_id, rows, cols, optimized=self.mode == "hdfs_raid_opt")
+
+    # -- row-family mode (rs / lrc via CodeFamily.repair_plan) -----------------
+    def _fix_family(self, group_id: str) -> RepairReport:
+        """Repair the group's single codeword row through the family's
+        repair plan. LRC 'local' steps fetch ONLY the k/2 surviving
+        members of the broken local group and XOR them — the locality
+        win the bake-off bench measures against the RS baseline, whose
+        every repair is a 'global' k-source GF(256) decode."""
+        fam = self.family
+        report = RepairReport(mode=fam.name)
+        cols = self.code.n
+        failed = [
+            c for c in range(cols) if not self.store.available((group_id, 0, c))
+        ]
+        if not failed:
+            return report
+        sim = self._sim()
+        plan = fam.repair_plan(set(failed))
+        if plan is None:
+            report.recovered = False
+            report.network_time = self._net_time(sim)
+            return report
+        ctx = self._obs_ctx()
+        descs = []
+        # a block repaired by an earlier step may serve as a later step's
+        # source; its bytes exist only once its own fetches landed
+        repaired_ready: dict[int, float] = {}
+        for kind, sources, repaired in plan:
+            blocks = np.stack(
+                [self.store.get((group_id, 0, c)) for c in sources]
+            )
+            dst = self._dst_node(group_id, 0, repaired[0])
+            ready = 0.0
+            for c in sources:
+                src_node = self.store.node_of((group_id, 0, c))
+                ready = max(
+                    ready,
+                    sim.transfer(
+                        Transfer(
+                            src_node,
+                            dst,
+                            blocks[0].nbytes,
+                            max(repaired_ready.get(c, 0.0), self.not_before),
+                            priority=self.priority,
+                            ctx=ctx,
+                        )
+                    ),
+                )
+            if kind == "local":
+                rep = self._vertical_repair(blocks)[None]
+            else:
+                rep = self._family_global_repair(
+                    np.asarray(sources), blocks, np.asarray(repaired)
+                )
+            for i, c in enumerate(repaired):
+                self.store.put_block((group_id, 0, c), rep[i])
+                repaired_ready[c] = ready
+                if self.on_block_repaired is not None:
+                    self.on_block_repaired((group_id, 0, c))
+                # redistribution of extra regenerated blocks to their homes
+                if i > 0:
+                    home = self.store.node_of((group_id, 0, c))
+                    sim.transfer(
+                        Transfer(
+                            dst, home, rep[i].nbytes, ready,
+                            priority=self.priority, ctx=ctx,
+                        )
+                    )
+            report.blocks_fetched += len(sources)
+            report.bytes_fetched += int(blocks.nbytes)
+            report.blocks_repaired += len(repaired)
+            descs.append(f"{'L' if kind == 'local' else 'G'}x{len(repaired)}")
+        report.network_time = self._net_time(sim)
+        report.compute_time = self._timed
+        report.schedule = ",".join(descs)
+        self._emit_group_span(group_id, sim, report)
+        return report
+
+    def _family_global_repair(
+        self, sources: np.ndarray, blocks: np.ndarray, missing: np.ndarray
+    ) -> np.ndarray:
+        """GF(256) repair through the family's own generator (LRC's
+        global parities are not the plain RS rows, so this cannot reuse
+        ``code.horizontal``)."""
+        row_ids, coeffs = self.family.code.repair_matrix(sources, missing)
+        pos = {int(a): i for i, a in enumerate(sources)}
+        sel = np.asarray([pos[int(r)] for r in row_ids])
+        return np.asarray(
+            self._measure(
+                _gf_matmul_jit, jnp.asarray(coeffs), jnp.asarray(blocks[sel])
+            )
+        )
 
     # -- HDFS-RAID modes --------------------------------------------------------
     def _fix_raid(self, group_id: str, rows: int, cols: int, optimized: bool) -> RepairReport:

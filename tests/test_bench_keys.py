@@ -11,9 +11,12 @@ megakernel block, the PR 6 observability block (gateway_obs: tracing
 overhead + stage attribution + bounded long-trace), and the PR 7
 gray-failure block (gateway_integrity: hedged-vs-unhedged p99 under
 fail-slow, the structural extra-byte budget, and corruption-as-erasure
-detection/repair counters), and skips cleanly when the snapshot has
-not been generated in this checkout (e.g. a fresh clone running only
-the unit suite).
+detection/repair counters), the PR 8 code-family bake-off block
+(gateway_bakeoff: per-family repair bandwidth / repair time / degraded
+p99 / storage overhead under the shared Weibull fault trace plus the
+CORE-vs-RS repair ratio and clean-path byte identity), and skips
+cleanly when the snapshot has not been generated in this checkout
+(e.g. a fresh clone running only the unit suite).
 """
 
 from __future__ import annotations
@@ -43,6 +46,7 @@ TOP_LEVEL_KEYS = {
     "gateway_megakernel",
     "gateway_obs",
     "gateway_integrity",
+    "gateway_bakeoff",
 }
 
 PIPELINE_KEYS = {
@@ -126,6 +130,26 @@ INTEGRITY_KEYS = {
     "corrupt_blocks_repaired",
     "wrong_bytes_served",
 }
+
+# PR-8 code-family bake-off block: RS vs CORE vs LRC through the same
+# gateway, workload and shared Weibull fault trace.
+BAKEOFF_KEYS = {
+    "families",
+    "fault_events",
+    "repair_blocks_per_lost",
+    "repair_bytes",
+    "repair_time_per_block_ms",
+    "degraded_p99_ms",
+    "storage_overhead",
+    "tolerance",
+    "core_vs_rs_repair_ratio",
+    "lrc_vs_rs_repair_ratio",
+    "core_vs_rs_repair_time_ratio",
+    "clean_path_identical",
+    "blocks_lost",
+}
+
+FAMILY_NAMES = {"core", "rs", "lrc"}
 
 
 @pytest.fixture(scope="module")
@@ -258,6 +282,44 @@ def test_gateway_integrity_values_sane(bench):
     assert integ["corruption_detected"] > 0
     assert integ["corrupt_blocks_repaired"] == integ["corruption_detected"]
     assert integ["mttd_s"] >= 0.0
+
+
+def test_gateway_bakeoff_keys(bench):
+    bak = bench["gateway_bakeoff"]
+    missing = BAKEOFF_KEYS - set(bak)
+    assert not missing, f"gateway_bakeoff lost stable keys: {sorted(missing)}"
+    assert set(bak["families"]) == FAMILY_NAMES
+    for section in (
+        "repair_blocks_per_lost",
+        "repair_bytes",
+        "repair_time_per_block_ms",
+        "degraded_p99_ms",
+        "storage_overhead",
+        "tolerance",
+    ):
+        assert FAMILY_NAMES <= set(bak[section]), section
+
+
+def test_gateway_bakeoff_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): the paper's headline claim —
+    CORE repair bandwidth <= 0.55x RS on single-node failure — holds in
+    our fabric, LRC's local groups beat the RS k-block re-decode, all
+    three families served byte-identical payloads on the clean path,
+    and nothing was lost under the within-tolerance trace."""
+    bak = bench["gateway_bakeoff"]
+    assert bak["fault_events"] > 0
+    assert 0 < bak["core_vs_rs_repair_ratio"] <= 0.55
+    assert bak["lrc_vs_rs_repair_ratio"] < 1.0
+    blk = bak["repair_blocks_per_lost"]
+    assert blk["core"] < blk["rs"] and blk["lrc"] < blk["rs"]
+    assert bak["clean_path_identical"] is True
+    assert bak["blocks_lost"] == 0
+    # storage price of the repair savings: CORE's stretch exceeds the
+    # shared-row n/k of RS and LRC
+    ovh = bak["storage_overhead"]
+    assert ovh["core"] > ovh["rs"] == ovh["lrc"]
+    assert all(v > 0 for v in bak["degraded_p99_ms"].values())
 
 
 def test_gateway_tenants_values_sane(bench):

@@ -32,7 +32,12 @@ CORE vs LRC through the same gateway, workload and shared
 Weibull-interarrival fault trace — per-family repair bandwidth, repair
 time, degraded p99 and storage overhead, gating CORE <= 0.55x RS
 repair traffic on single-node failure and clean-path byte identity
-across families.
+across families. The write-dataplane rows (gateway_writes): one mixed
+read/write trace through the ragged ENCODE megakernel vs the per-PUT
+sync baseline (PUT throughput, billed latency, jit signatures per
+encode kind, stripe sealing), plus a PUT/delete churn trace under
+crashes + corruption + repair replayed twice, gating zero stale
+parity, zero wrong sealed bytes and bit-identical replay.
 
 Results land in BENCH_gateway.json (stable keys) so the perf trajectory
 is tracked across PRs — benchmarks/run.py writes it on every --fast run.
@@ -61,6 +66,7 @@ from repro.kernels import autotune
 from repro.scenario import (
     ScenarioConfig,
     correlated_surge_setup,
+    deterministic_fingerprint,
     generate_scenario,
     run_scenario,
 )
@@ -251,6 +257,7 @@ def run(fast: bool = True) -> list[dict]:
         rows.append(row)
 
     rows.extend(_run_megakernel_rows(code, num_nodes, fast))
+    rows.extend(_run_writes_rows(fast))
     rows.extend(_run_tenant_rows(code, num_nodes, fast))
     rows.extend(_run_scenario_rows(code, num_nodes, fast))
     rows.extend(_run_obs_rows(code, fast))
@@ -319,6 +326,167 @@ def _run_megakernel_rows(code, num_nodes, fast: bool) -> list[dict]:
         row = _serve_row("gateway_megakernel", gw, wl, [])
         row["coalesce"] = coalesce
         rows.append(row)
+    return rows
+
+
+def _run_writes_rows(fast: bool) -> list[dict]:
+    """Write-dataplane rows (bench="gateway_writes"): the identical
+    mixed read/write trace served through both encode dataplanes —
+    write_coalesce="sync" (one billed encode launch pair per PUT, the
+    baseline) vs "ragged" (one ragged EH launch + one XOR-fold EV
+    launch per window) — on a computation-critical profile with modeled
+    encode billing so the launch count, not kernel wall jitter, is the
+    measured difference. Full-row overwrites, small sealed PUTs and
+    deletes all ride the trace; every run drains through seal_flush and
+    both consistency audits. The churn row then replays a seeded
+    within-tolerance fault trace (crashes + corruption + scrub + repair)
+    over PUT/delete churn TWICE, gating zero stale parity, zero wrong
+    sealed bytes, zero blocks lost, and bit-identical replay
+    fingerprints — modeled decode AND encode costs make the whole run
+    deterministic."""
+    code = CoreCode(9, 6, 3)
+    num_nodes, q, num_objects = 60, 4096, 24
+    n_req = 300 if fast else 800
+    rows = []
+
+    # PUT-heavy so same-kind windows hold real batches (a GET arrival
+    # closes the open PUT window — at 50/50 mixing the mean run is ~2
+    # PUTs and neither dataplane can amortize launches)
+    wl = WorkloadConfig(
+        num_objects=num_objects,
+        num_requests=n_req,
+        arrival_rate=1500.0,
+        zipf_s=0.4,
+        put_fraction=0.8,
+        small_put_fraction=0.2,
+        small_put_bytes=3000,
+        delete_fraction=0.04,
+        seed=61,
+    )
+    reqs = generate_requests(wl)
+    for mode in ("sync", "ragged"):
+        cfg = GatewayConfig(
+            batch_window=0.01,
+            write_coalesce=mode,
+            encode_cost=0.002,
+            decode_cost=0.002,
+        )
+        gw = ObjectGateway(
+            code, ClusterProfile.computation_critical(), num_nodes, cfg
+        )
+        rng = np.random.default_rng(61)
+        gw.load_objects(
+            rng.integers(0, 256, (num_objects, code.k, q), dtype=np.uint8)
+        )
+        rep = gw.serve(list(reqs))
+        gw.seal_flush(reqs[-1].time + 1.0)
+        puts = [
+            r for r in rep.records
+            if r.kind == "put" and r.latency is not None
+        ]
+        lat = np.array([r.latency for r in puts])
+        span = max(r.time + r.latency for r in puts) - min(r.time for r in puts)
+        st = gw.coalescer.stats
+        by_kind = gw.coalescer.jit_entries_by_kind()
+        parity = gw.audit_parity()
+        sealed = gw.audit_sealed_stripes()
+        rows.append(
+            {
+                "bench": "gateway_writes",
+                "mode": mode,
+                "requests": len(rep.records),
+                "completed": len(rep.completed),
+                "puts": len(puts),
+                "put_rps": round(len(puts) / max(span, 1e-9), 1),
+                "put_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+                "put_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+                "put_rejections": sum(rep.put_rejections.values()),
+                "encode_ops": st.encode_ops,
+                "encode_calls": st.encode_calls,
+                "encode_windows": st.encode_windows,
+                "jit_eh": by_kind.get("EH", 0),
+                "jit_ev": by_kind.get("EV", 0),
+                "stripes_sealed": int(
+                    rep.metrics.counter_total("stripes_sealed")
+                ),
+                "deletes": int(rep.metrics.counter_total("deletes")),
+                "stale_blocks": parity["stale_blocks"],
+                "extents_checked": sealed["extents_checked"],
+                "extents_wrong": sealed["extents_wrong"],
+            }
+        )
+
+    # -- churn audit row: faulted trace, replayed twice ----------------------
+    scfg = ScenarioConfig(
+        duration=0.4,
+        num_nodes=30,
+        nodes_per_rack=3,
+        max_concurrent_failures=code.n - code.k,
+        crash_rate=6.0,
+        mean_downtime=0.1,
+        transient_fraction=0.6,
+        corruption_rate=4.0,
+        corruption_blocks=1,
+        seed=67,
+    )
+    trace = generate_scenario(scfg)
+    churn_wl = WorkloadConfig(
+        num_objects=num_objects,
+        num_requests=200 if fast else 500,
+        arrival_rate=500.0,
+        zipf_s=0.4,
+        put_fraction=0.35,
+        small_put_fraction=0.3,
+        small_put_bytes=3000,
+        delete_fraction=0.05,
+        seed=67,
+    )
+
+    def _churn_run():
+        gw = _mk_gateway(
+            code, 30, q, num_objects, seed=67,
+            batch_window=0.01,
+            encode_cost=0.002,
+            decode_cost=0.002,
+            repair_on_failure=True,
+            repair_delay=0.05,
+            scrub_interval=0.08,
+            scrub_blocks_per_run=48,
+        )
+        res = run_scenario(gw, trace, churn_wl)
+        gw.seal_flush(res.report.records[-1].time + 1.0)
+        return gw, res
+
+    gw, res = _churn_run()
+    _, res2 = _churn_run()
+    rep = res.report
+    parity = gw.audit_parity()
+    sealed = gw.audit_sealed_stripes()
+    puts = [
+        r for r in rep.records if r.kind == "put" and r.latency is not None
+    ]
+    rows.append(
+        {
+            "bench": "gateway_writes",
+            "mode": "churn",
+            "requests": len(rep.records),
+            "completed": len(rep.completed),
+            "puts": len(puts),
+            "deletes": int(rep.metrics.counter_total("deletes")),
+            "fault_events": len(trace.fault_events()),
+            "degraded_gets": len(rep.degraded_gets),
+            "blocks_checked": parity["blocks_checked"],
+            "stale_blocks": parity["stale_blocks"],
+            "corrupt_blocks_end": parity["corrupt_blocks"],
+            "rows_checked": sealed["rows_checked"],
+            "rows_degraded": sealed["rows_degraded"],
+            "extents_checked": sealed["extents_checked"],
+            "extents_wrong": sealed["extents_wrong"],
+            "blocks_lost": res.blocks_lost,
+            "replay_identical": deterministic_fingerprint(res)
+            == deterministic_fingerprint(res2),
+        }
+    )
     return rows
 
 
@@ -1007,6 +1175,7 @@ def bench_summary(rows: list[dict]) -> dict:
             ),
         },
         "gateway_megakernel": _megakernel_summary(rows),
+        "gateway_writes": _writes_summary(rows),
         "gateway_tenants": _tenant_summary(rows),
         "gateway_scenario": _scenario_summary(rows),
         "gateway_obs": _obs_summary(rows),
@@ -1050,6 +1219,47 @@ def _megakernel_summary(rows: list[dict]) -> dict:
             "bucketed": buck["jit_entries"],
         },
         "decode_shapes": rag["decode_shapes"],
+    }
+
+
+def _writes_summary(rows: list[dict]) -> dict:
+    """The gateway_writes block of BENCH_gateway.json (stable keys):
+    ragged-vs-sync PUT throughput and latency under modeled encode
+    billing, live jit signatures per encode kind, sealing volume, and
+    the churn-audit consistency counters with the replay-identity bit."""
+    wr = {r["mode"]: r for r in rows if r["bench"] == "gateway_writes"}
+    rag, sync, churn = wr["ragged"], wr["sync"], wr["churn"]
+    return {
+        "put_rps": {"sync": sync["put_rps"], "ragged": rag["put_rps"]},
+        "speedup": round(rag["put_rps"] / max(sync["put_rps"], 1e-9), 3),
+        "put_p50_ms": {
+            "sync": sync["put_p50_ms"],
+            "ragged": rag["put_p50_ms"],
+        },
+        "put_p99_ms": {
+            "sync": sync["put_p99_ms"],
+            "ragged": rag["put_p99_ms"],
+        },
+        "encode_launches": {
+            "sync": sync["encode_calls"],
+            "ragged": rag["encode_calls"],
+        },
+        "encode_ops": rag["encode_ops"],
+        "jit_per_encode_kind": {
+            "EH": rag["jit_eh"],
+            "EV": rag["jit_ev"],
+        },
+        "stripes_sealed": rag["stripes_sealed"],
+        "deletes": rag["deletes"],
+        "churn_audit": {
+            "fault_events": churn["fault_events"],
+            "blocks_checked": churn["blocks_checked"],
+            "stale_blocks": churn["stale_blocks"],
+            "extents_checked": churn["extents_checked"],
+            "extents_wrong": churn["extents_wrong"],
+            "blocks_lost": churn["blocks_lost"],
+            "replay_identical": churn["replay_identical"],
+        },
     }
 
 
@@ -1345,6 +1555,50 @@ def check(rows: list[dict]) -> list[str]:
         f"bounded tile filler ({rag_row['padded_byte_ratio']:.1%} vs "
         f"bucketed {mk_rows['bucketed']['padded_byte_ratio']:.1%} of "
         f"staged bytes) ({'PASS' if sig_ok else 'FAIL'})"
+    )
+    # write dataplane: ragged encode windows beat the per-PUT baseline
+    # >= 1.5x on PUT throughput under identical modeled launch billing
+    wr = _writes_summary(rows)
+    wr_ok = wr["speedup"] >= 1.5
+    msgs.append(
+        f"gateway: ragged encode beats sync PUTs >= 1.5x "
+        f"({wr['put_rps']['sync']:.0f} -> {wr['put_rps']['ragged']:.0f} "
+        f"put/s, {wr['speedup']:.2f}x) ({'PASS' if wr_ok else 'FAIL'})"
+    )
+    # ...with <= 2 live jit signatures per encode kind and real PUT
+    # latency (billed encode + transfer causality: no free writes)
+    jit = wr["jit_per_encode_kind"]
+    wsig_ok = (
+        0 < jit["EH"] <= 2
+        and 0 < jit["EV"] <= 2
+        and wr["put_p50_ms"]["ragged"] > 0
+        and wr["put_p99_ms"]["ragged"] > 0
+    )
+    msgs.append(
+        f"gateway: encode megakernel holds <= 2 signatures/kind "
+        f"(EH {jit['EH']}, EV {jit['EV']}) with billed PUT latency "
+        f"(p50 {wr['put_p50_ms']['ragged']:.2f} ms) "
+        f"({'PASS' if wsig_ok else 'FAIL'})"
+    )
+    # churn consistency: after the within-tolerance fault trace every
+    # sealed extent decodes byte-identically, vertical parity is never
+    # stale, nothing is lost, and the whole faulted run replays
+    # bit-identically
+    ca = wr["churn_audit"]
+    churn_ok = (
+        ca["stale_blocks"] == 0
+        and ca["extents_wrong"] == 0
+        and ca["blocks_lost"] == 0
+        and ca["fault_events"] > 0
+        and ca["extents_checked"] > 0
+        and ca["replay_identical"]
+    )
+    msgs.append(
+        f"gateway: churn audit clean over {ca['fault_events']} fault "
+        f"events ({ca['blocks_checked']} blocks, 0 stale; "
+        f"{ca['extents_checked']} sealed extents, 0 wrong; replay "
+        f"{'identical' if ca['replay_identical'] else 'DIVERGED'}) "
+        f"({'PASS' if churn_ok else 'FAIL'})"
     )
     # contention: repair bytes ride the shared fabric
     cont = [r for r in rows if r["bench"] == "gateway_contention"]

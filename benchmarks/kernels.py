@@ -3,7 +3,9 @@ parity vs the pure-jnp oracles — us/call in interpret mode (CPU) and the
 structural VMEM/roofline numbers for the TPU target — plus the ragged
 decode megakernel (kernels/ragged_decode.py) against an equal-bytes
 sequence of per-shape stacked launches, the launch-overhead contrast the
-gateway's ``gateway_megakernel`` rows measure end to end.
+gateway's ``gateway_megakernel`` rows measure end to end, and its ENCODE
+mirror (kernels/ragged_encode.py) — the write window's parity-generation
+and XOR-fold launches — against the same per-shape baseline.
 
 The paper's compute contrast (cheap XOR repair vs RS decode) shows up
 directly as the flop/byte gap between the two kernels.
@@ -63,6 +65,7 @@ def run(fast: bool = True) -> list[dict]:
              "tpu_bound_us": round(6 * q / 819e9 * 1e6, 2)}
         )
     rows.extend(_ragged_rows(fast))
+    rows.extend(_ragged_encode_rows(fast))
     return rows
 
 
@@ -108,6 +111,59 @@ def _ragged_rows(fast: bool) -> list[dict]:
          "per_shape_launches_us": round(t_split, 1),
          "launch_amortization": round(t_split / max(t_mega, 1e-9), 2),
          "match": bool(match)}
+    ]
+
+
+def _ragged_encode_rows(fast: bool) -> list[dict]:
+    """Encode mirror of the ragged microbench: one descriptor-driven
+    ENCODE launch over C mixed parity-generation tiles vs C per-shape
+    stacked launches of the same bytes (the write window's launch
+    overhead), plus the XOR fold entry — both checked against the host
+    oracles the gateway's consistency audits use."""
+    rng = np.random.default_rng(6)
+    n, k = 9, 6
+    c = 32
+    tn = 16384 if fast else 65536
+    pmat = rs.parity_matrix(n, k)  # (n - k, k)
+    coef_rows = np.stack([pmat[i % (n - k)] for i in range(c)])
+    mc = np.stack(
+        [expand_coeff_bitplanes(coef_rows[i][None, :])[0] for i in range(c)]
+    )
+    data = rng.integers(0, 256, (c, k, tn), dtype=np.uint8)
+    jdata = jnp.asarray(data)
+    t_mega = _time(
+        lambda d: ops.gf256_ragged_encode(mc, d, interpret=True), jdata
+    )
+    per_tile = [jnp.asarray(data[i]) for i in range(c)]
+
+    def _stacked(_d):
+        return [
+            ops.gf256_matmul(coef_rows[i][None, :], per_tile[i],
+                             block_n=tn, interpret=True)
+            for i in range(c)
+        ]
+
+    t_split = _time(_stacked, jdata)
+    out = np.asarray(ops.gf256_ragged_encode(mc, jdata, interpret=True))
+    match = all(
+        (out[i] == np.asarray(
+            ref.gf256_matmul(jnp.asarray(coef_rows[i][None, :]), per_tile[i])
+        )[0]).all()
+        for i in range(c)
+    )
+    # the EV fold entry: stored parity + (old, new) delta pairs
+    fold = rng.integers(0, 256, (c, 5, tn), dtype=np.uint8)
+    out_x = np.asarray(ops.xor_ragged_encode(jnp.asarray(fold), interpret=True))
+    match_x = all(
+        (out_x[i] == np.asarray(ref.xor_parity(jnp.asarray(fold[i])))).all()
+        for i in range(c)
+    )
+    return [
+        {"bench": "kernel_ragged_encode", "tiles": c, "tile_bytes": tn,
+         "megakernel_us": round(t_mega, 1),
+         "per_shape_launches_us": round(t_split, 1),
+         "launch_amortization": round(t_split / max(t_mega, 1e-9), 2),
+         "match": bool(match and match_x)}
     ]
 
 

@@ -54,6 +54,19 @@
 # observed foreground p99 headroom against tenant_slo_p99 — plus MTTR
 # urgency as a repair drags — to the "repair" tenant's fabric weight
 # and engine share before every group repair (GatewayReport.pacing).
+#
+# Write dataplane (GatewayConfig.write_coalesce, default "ragged"):
+# PUT windows mirror the decode megakernel — a batch's RS parity-row
+# generations (kind "EH") and XOR-delta vertical-parity folds (kind
+# "EV", one fold op per touched parity block via XOR associativity)
+# each run as ONE ragged ENCODE launch (kernels/ragged_encode.py),
+# billed on the same engine pool decodes ride; client transfers start
+# only after the billed encodes land. write_coalesce="sync" is the
+# per-PUT launch baseline. Small PUTs (Request.nbytes set) journal for
+# an instant ack and pack into shared codeword rows via StripeSealer;
+# deletes tombstone in place. audit_parity() / audit_sealed_stripes()
+# are the end-to-end churn consistency audits (zero stale parity, every
+# sealed extent byte-identical through degraded decode).
 from repro.gateway.cache import CacheStats, LRUBlockCache
 from repro.gateway.coalescer import (
     PAD_LADDER,
@@ -74,6 +87,7 @@ from repro.gateway.planner import (
     ReadPlan,
     UnreadableObjectError,
 )
+from repro.gateway.sealer import Extent, StripeSealer
 from repro.gateway.workload import (
     CapacityLossEvent,
     CorruptionEvent,
@@ -117,7 +131,9 @@ __all__ = [
     "RequestRecord",
     "DecodeOp",
     "DegradedReadPlanner",
+    "Extent",
     "ReadPlan",
+    "StripeSealer",
     "UnreadableObjectError",
     "FailureEvent",
     "Request",

@@ -136,6 +136,13 @@ class CoalescerStats:
     jit_entries: int = 0  # LIVE traced kernel signatures (see below)
     jit_retraces: int = 0  # every trace ever taken (compile churn)
     decode_shapes: int = 0  # distinct decode shape_keys ever executed
+    # write-dataplane counters (kinds "EH"/"EV"): kept separate so a
+    # read-only run's decode stats stay bit-identical with or without
+    # the encode path compiled in
+    encode_ops: int = 0  # logical encode ops requested
+    encode_calls: int = 0  # encode kernel launches issued
+    encode_compute_time: float = 0.0  # scaled seconds, cumulative
+    encode_windows: int = 0  # execute_encode() calls that had work
 
     @property
     def coalescing_ratio(self) -> float:
@@ -203,13 +210,18 @@ class DecodeCoalescer:
     def _tuned_for(self, kind: str) -> autotune.TunedKernel | None:
         if not self.autotune_kernels:
             return None
-        key = f"{self.mode}:{kind}"
+        # encode kinds ("E*") only ever run ragged — there is no
+        # bucketed encode baseline (the write-path comparison point is
+        # the gateway's per-PUT synchronous billing, not a shape-bucket
+        # dataplane) — so they always take the ragged tuners
+        mode = RAGGED if kind.startswith("E") else self.mode
+        key = f"{mode}:{kind}"
         tuned = self._tuned.get(key)
         if tuned is None:
-            if self.mode == RAGGED:
+            if mode == RAGGED:
                 tune = (
                     autotune.tuned_ragged_xor
-                    if kind == "V"
+                    if kind in ("V", "EV")
                     else autotune.tuned_ragged_gf256
                 )
             else:
@@ -268,6 +280,41 @@ class DecodeCoalescer:
         self.stats.decode_shapes = len(self._shapes)
         return results, units
 
+    def execute_encode(
+        self,
+        encode_ops: list[DecodeOp],
+        fetch: Callable[[BlockKey], np.ndarray],
+    ) -> tuple[list[dict[int, np.ndarray]], list[LaunchUnit]]:
+        """Run a PUT window's encode work in chunked megakernel launches:
+        GF(256) parity-row generation ("EH" ops, coefficient rows from
+        coding/rs.py's ``parity_matrix``) and XOR-delta parity folds
+        ("EV" ops — stored parity plus any number of old^new row
+        contributions, one op per touched parity block per window).
+
+        Same interface and staging contract as ``execute``, but always
+        via the ragged path (see ``_tuned_for``) and the separate
+        kernels/ragged_encode.py jit entries, so encode signature growth
+        is observable per kind and never retraces the decode kernels.
+        Source keys are whatever hashables ``fetch`` resolves — the
+        gateway feeds host-staged old/new row arrays under synthetic
+        tokens. Emitted LaunchUnits are billed on the engine pool by the
+        gateway exactly like decode launches (best-observed kernel time,
+        modeled-cost override, launch-wide readiness barrier)."""
+        results: list[dict[int, np.ndarray]] = [dict() for _ in encode_ops]
+        units: list[LaunchUnit] = []
+        if not encode_ops:
+            return results, units
+        self.stats.encode_windows += 1
+        by_kind: dict[str, list[int]] = defaultdict(list)
+        for j, op in enumerate(encode_ops):
+            assert op.kind.startswith("E"), f"not an encode kind: {op.kind!r}"
+            by_kind[op.kind].append(j)
+        for kind in sorted(by_kind):
+            self._execute_ragged(
+                kind, by_kind[kind], encode_ops, fetch, results, units
+            )
+        return results, units
+
     # -- ragged megakernel path -------------------------------------------------
     def _execute_ragged(
         self, kind, idxs, decode_ops, fetch, results, units
@@ -292,7 +339,7 @@ class DecodeCoalescer:
                     f"ragged decode op sources must share a length: "
                     f"{src[s].shape[-1]} != {length}"
                 )
-            if kind == "V":
+            if kind in ("V", "EV"):
                 rows.append((j, op.targets[0], None, op.sources, length))
             else:
                 planes = expand_coeff_bitplanes(np.asarray(op.coeffs))
@@ -327,7 +374,10 @@ class DecodeCoalescer:
             pos += c
         for ri, (j, col, _planes, _sources, _length) in enumerate(rows):
             results[j][col] = out_rows[ri]
-        self.stats.decode_ops += len(idxs)
+        if kind.startswith("E"):
+            self.stats.encode_ops += len(idxs)
+        else:
+            self.stats.decode_ops += len(idxs)
         self.stats.ops_by_kind[kind] = (
             self.stats.ops_by_kind.get(kind, 0) + len(idxs)
         )
@@ -352,8 +402,9 @@ class DecodeCoalescer:
         billed by tile share."""
         data = self._buffer((kind, "data", c), (c, k_cap, tn))
         data.fill(0)
+        xor_kind = kind in ("V", "EV")
         mc = None
-        if kind != "V":
+        if not xor_kind:
             mc = self._buffer((kind, "mc", c), (c, k_cap, 8))
             mc.fill(0)
         useful = 0
@@ -364,10 +415,21 @@ class DecodeCoalescer:
             if mc is not None:
                 mc[slot, : planes.shape[0], :] = planes
             useful += valid * len(sources)
-        packed = bool(tuned.packed) if (tuned is not None and kind != "V") else False
+        packed = bool(tuned.packed) if (tuned is not None and not xor_kind) else False
         interpret = self.interpret
+        # encode kinds route to the separate ragged_encode jit entries,
+        # keeping the encode/decode signature pools independently
+        # countable (jit_entries_by_kind) and independently retraced
         if kind == "V":
             launch = lambda: ops.xor_ragged(jnp.asarray(data), interpret=interpret)
+        elif kind == "EV":
+            launch = lambda: ops.xor_ragged_encode(
+                jnp.asarray(data), interpret=interpret
+            )
+        elif kind == "EH":
+            launch = lambda: ops.gf256_ragged_encode(
+                mc, jnp.asarray(data), interpret=interpret, packed=packed
+            )
         else:
             launch = lambda: ops.gf256_ragged(
                 mc, jnp.asarray(data), interpret=interpret, packed=packed
@@ -416,7 +478,8 @@ class DecodeCoalescer:
         # engine pool can spread this single launch across engines
         # (the gateway still gates all of them on the launch-wide
         # source barrier)
-        launch_id = self.stats.decode_calls
+        encode = kind.startswith("E")
+        launch_id = self.stats.encode_calls if encode else self.stats.decode_calls
         tiles_per_op = Counter(rows[ri][0] for ri, _off, _valid in chunk_tiles)
         n_valid = len(chunk_tiles)
         for j in sorted(tiles_per_op):
@@ -426,8 +489,12 @@ class DecodeCoalescer:
                     (j,), dt * frac, kind, launch_id, frac, tiles_per_op[j]
                 )
             )
-        self.stats.decode_calls += 1
-        self.stats.compute_time += dt
+        if encode:
+            self.stats.encode_calls += 1
+            self.stats.encode_compute_time += dt
+        else:
+            self.stats.decode_calls += 1
+            self.stats.compute_time += dt
         self.stats.record_batch(len(tiles_per_op))
         self.stats.staged_bytes += useful
         self.stats.padded_bytes += c * k_cap * tn - useful

@@ -109,17 +109,21 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from repro.coding import rs
+from repro.coding.gf256 import np_matmul
 from repro.core.failure_matrix import independent_clusters
 from repro.core.product_code import CoreCode, CoreCodec
 from repro.core.recoverability import is_recoverable
 from repro.gateway.cache import LRUBlockCache
 from repro.gateway.coalescer import DecodeCoalescer
 from repro.gateway.planner import (
+    DecodeOp,
     DegradedReadPlanner,
     ReadPlan,
     UnreadableObjectError,
     make_family,
 )
+from repro.gateway.sealer import Extent, StripeSealer
 from repro.gateway.workload import (
     CapacityLossEvent,
     CorruptionEvent,
@@ -146,6 +150,10 @@ from repro.storage.repair import BlockFixer, PacingController, Scrubber
 
 PIPELINED = "pipelined"
 SERIAL = "serial"
+
+# Sealed-stripe rows register as synthetic objects above this id, so
+# they can never collide with workload-drawn tenant object ids.
+SEAL_OID_BASE = 1 << 40
 
 # Admission-control policies (GatewayConfig.admission):
 #   off     — admit everything (SLOs are observed, never enforced)
@@ -195,6 +203,19 @@ class GatewayConfig:
     # comparisons) with no cold-vs-warm-jit sensitivity. None (default):
     # measured, best-observed-per-signature billing.
     decode_cost: float | None = None
+    # -- write dataplane -------------------------------------------------------
+    # Modeled ENCODE cost per launch (same semantics as decode_cost);
+    # None falls back to decode_cost, and to the coalescer's measured
+    # encode history when both are None. Encode launches are billed on
+    # the SAME engine pool decodes ride, so PUT latency reflects the
+    # engine backlog and writes push back on degraded reads.
+    encode_cost: float | None = None
+    # write dataplane shape: "ragged" = one descriptor-driven encode
+    # megakernel window per PUT batch (EH parity-row generation + EV
+    # XOR-delta parity folds, one launch per kind); "sync" = one
+    # launch pair PER PUT (the synchronous write baseline the bench
+    # compares against).
+    write_coalesce: str = "ragged"
     # -- fault scenarios / closed-loop repair ---------------------------------
     negative_ttl: float = 5.0  # seconds a known-down block stays negative-cached
     repair_pacing: bool = False  # SLO-aware closed-loop repair pacing
@@ -301,6 +322,7 @@ class GatewayReport:
     launches_per_window: float = 0.0  # decode launches per batching window
     padded_byte_ratio: float = 0.0  # filler fraction of staged decode bytes
     rejections: dict = field(default_factory=dict)  # tenant -> refused GETs
+    put_rejections: dict = field(default_factory=dict)  # tenant -> refused PUTs
     # time from block loss to repair-heal completion, one sample per
     # block healed by BlockFixer during this serve() call
     mttr_samples: BoundedSamples = field(default_factory=BoundedSamples)
@@ -589,6 +611,16 @@ class ObjectGateway:
                 f"decode_cost must be positive or None (measured), got "
                 f"{self.config.decode_cost}"
             )
+        if self.config.encode_cost is not None and self.config.encode_cost <= 0:
+            raise ValueError(
+                f"encode_cost must be positive or None, got "
+                f"{self.config.encode_cost}"
+            )
+        if self.config.write_coalesce not in ("ragged", "sync"):
+            raise ValueError(
+                f"write_coalesce must be 'ragged' or 'sync', got "
+                f"{self.config.write_coalesce!r}"
+            )
         if (
             self.config.repair_groups_per_run is not None
             and self.config.repair_groups_per_run < 1
@@ -752,6 +784,24 @@ class ObjectGateway:
         # pending detection-triggered / event-triggered repairs:
         # (due time, node | -1 continuation | -2 corruption detection)
         self._repair_queue: list[tuple[float, int]] = []
+        # -- write dataplane state ---------------------------------------------
+        # tombstoned objects: blocks and ground truth stay resident (the
+        # group parity remains a consistent codeword — eager block
+        # removal would force a parity RMW per delete) until a future GC
+        # reclaims whole groups; GETs answer not-found.
+        self._deleted: set[int] = set()
+        # per-tenant in-flight write work: (completion time, bytes) of
+        # every PUT fabric transfer still unfinished — the admission
+        # estimator's view of write pressure (GETs and PUTs both pay it)
+        self._put_inflight: dict[str, list[tuple[float, float]]] = {}
+        # small-object packing: lazily built (needs _block_bytes), plus
+        # sealed rows awaiting a full group and the registry the sealed-
+        # stripe audit walks
+        self._sealer: StripeSealer | None = None
+        self._pending_rows: list[tuple[int, np.ndarray, list[Extent]]] = []
+        self._sealed_extents: list[Extent] = []
+        self._sealed_rows: dict[int, int] = {}  # row_seq -> object id
+        self._seal_group_seq = 0
 
     # -- availability: store OR cache, gated on repair completion --------------
     def _available(self, key: BlockKey) -> bool:
@@ -849,13 +899,23 @@ class ObjectGateway:
         fi = 0
         batch: list[Request] = []
         batch_deadline = None
+        batch_kind = None  # "get" | "put" — windows are homogeneous
+
+        def flush_open():
+            nonlocal batch, batch_deadline, batch_kind
+            if batch:
+                if batch_kind == "put":
+                    self._flush_puts(batch, report)
+                else:
+                    self._flush(batch, report)
+            batch, batch_deadline, batch_kind = [], None, None
 
         def boundary_events(now: float | None):
             """Apply cluster / repair / scrub events due before ``now``
             (None => all remaining; scrub ticks stop with the request
             stream — a final drain must not scrub forever), flushing the
             open batch first."""
-            nonlocal fi, batch, batch_deadline
+            nonlocal fi
             while True:
                 next_evt = events[fi].time if fi < len(events) else None
                 next_rep = repair_queue[0][0] if repair_queue else None
@@ -869,8 +929,7 @@ class ObjectGateway:
                 if now is not None and t_evt > now:
                     return
                 if batch and batch_deadline is not None:
-                    self._flush(batch, report)
-                    batch, batch_deadline = [], None
+                    flush_open()
                 if next_evt is not None and t_evt == next_evt:
                     evt = events[fi]
                     fi += 1
@@ -892,24 +951,25 @@ class ObjectGateway:
 
         for req in reqs:
             boundary_events(req.time)
-            if req.kind == "put":
-                # PUT is a window barrier: it mutates blocks and parity,
-                # which must not interleave with an open window's planned
-                # (and cache-pinned) reads.
-                if batch:
-                    self._flush(batch, report)
-                    batch, batch_deadline = [], None
-                report.add_record(self._handle_put(req, report))
+            if req.kind == "delete":
+                # a delete is an instant metadata barrier: flush the open
+                # window first so its planned (cache-pinned) reads see
+                # pre-delete state, then tombstone
+                flush_open()
+                report.add_record(self._handle_delete(req, report))
                 continue
-            if batch and req.time > batch_deadline:
-                self._flush(batch, report)
-                batch, batch_deadline = [], None
+            kind = "put" if req.kind == "put" else "get"
+            # windows are HOMOGENEOUS: a kind switch closes the open
+            # window (a PUT mutates blocks and parity, which must not
+            # interleave with an open window's planned reads — and
+            # arrival-ordered flushing is what keeps read-after-write)
+            if batch and (batch_kind != kind or req.time > batch_deadline):
+                flush_open()
             if not batch:
                 batch_deadline = req.time + cfg.batch_window
+                batch_kind = kind
             batch.append(req)
-        if batch:
-            self._flush(batch, report)
-            batch, batch_deadline = [], None
+        flush_open()
         boundary_events(None)
         st = self.coalescer.stats
         report.jit_cache_entries = st.jit_entries
@@ -921,6 +981,9 @@ class ObjectGateway:
         m = report.metrics
         m.gauge("jit_entries").set(st.jit_entries)
         m.gauge("jit_retraces").set(st.jit_retraces)
+        m.gauge("encode_launches").set(st.encode_calls)
+        m.gauge("encode_ops").set(st.encode_ops)
+        m.gauge("encode_windows").set(st.encode_windows)
         for name, v in autotune.cache_stats().items():
             m.gauge(f"autotune_{name}").set(v)
         if self.tracer.enabled:
@@ -944,7 +1007,10 @@ class ObjectGateway:
             # serve() handles PUTs as window barriers before batching;
             # a PUT inside a window would break the pin/plan invariants
             assert req.kind == "get", f"batch may only hold GETs, got {req.kind}"
-            if req.object_id not in self._objects:
+            if (
+                req.object_id not in self._objects
+                or req.object_id in self._deleted
+            ):
                 report.add_record(
                     RequestRecord(
                         req.time, req.object_id, "get", None, False, 0, 0, 0,
@@ -1697,84 +1763,536 @@ class ObjectGateway:
             )
         return (op if won else None), nbytes, hits, True
 
-    # -- PUT --------------------------------------------------------------------
-    def _handle_put(self, req: Request, report: GatewayReport) -> RequestRecord:
-        """Overwrite one object (one group row) in place.
-
-        CORE: re-encode the row RS codeword and XOR-delta the vertical
-        parity row (linearity of both codes — no other row is touched).
-        Row families (rs / lrc, rows == 1): the object IS the whole
-        codeword row, so the overwrite re-encodes all n blocks through
-        the family's generator and there is no vertical parity to
-        reconcile.
-
-        The parity read-modify-write verifies the stored parity digest
-        BEFORE folding the delta in: XOR-ing into silently-corrupt bytes
-        and restamping would LAUNDER the corruption under a fresh valid
-        checksum. A corrupt parity block is treated like an unavailable
-        one — detected, quarantined, reconciled by repair."""
+    # -- write dataplane ---------------------------------------------------------
+    def _handle_delete(
+        self, req: Request, report: GatewayReport
+    ) -> RequestRecord:
+        """Tombstone an object. Blocks and ground truth stay resident
+        (the group parity remains a consistent codeword — eager block
+        removal would force a parity RMW per delete); a later overwrite
+        PUT resurrects the object in place. A delete is pure metadata:
+        zero fabric traffic, acknowledged instantly."""
         oid = req.object_id
-        if oid not in self._objects:
-            return RequestRecord(
-                req.time, oid, "put", None, False, 0, 0, 0, tenant=req.tenant
+        known = oid in self._objects and oid not in self._deleted
+        if known:
+            self._deleted.add(oid)
+            report.metrics.counter("deletes", tenant=req.tenant).inc()
+        return RequestRecord(
+            req.time, oid, "delete", 0.0 if known else None, False, 0, 0, 0,
+            tenant=req.tenant,
+        )
+
+    def _flush_puts(self, batch: list[Request], report: GatewayReport) -> None:
+        """One PUT window: admission, small-object journaling/sealing,
+        then the window's encodes — ONE ragged ENCODE megakernel window
+        for the whole batch (``write_coalesce="ragged"``) or one per PUT
+        (``"sync"``, the synchronous write baseline)."""
+        cfg = self.config
+        slos = cfg.tenant_slo_p99 or {}
+        full_reqs: list[Request] = []
+        small_reqs: list[Request] = []
+        for req in batch:
+            assert req.kind == "put", f"put batch may only hold PUTs, got {req.kind}"
+            self._clock = req.time
+            if req.nbytes is None and req.object_id not in self._objects:
+                report.add_record(
+                    RequestRecord(
+                        req.time, req.object_id, "put", None, False, 0, 0, 0,
+                        tenant=req.tenant,
+                    )
+                )
+                continue
+            # SLO admission: writes are admitted against the tenant's
+            # in-flight write backlog + this PUT's own bytes + (full
+            # overwrites) the encode-engine wait — the same currency the
+            # GET estimator charges, so writes and reads push back on
+            # each other instead of writes riding for free
+            slo = slos.get(req.tenant)
+            if slo is not None and cfg.admission != ADMIT_OFF:
+                est = self._estimate_put_time(req, req.time)
+                if est > slo:
+                    report.put_rejections[req.tenant] = (
+                        report.put_rejections.get(req.tenant, 0) + 1
+                    )
+                    report.add_record(
+                        RequestRecord(
+                            req.time, req.object_id, "put", None, False, 0,
+                            0, 0, tenant=req.tenant, rejected=True,
+                        )
+                    )
+                    continue
+            (small_reqs if req.nbytes is not None else full_reqs).append(req)
+        seal_groups = self._append_small(small_reqs, report)
+        jobs: list[dict] = []
+        cur: dict[int, np.ndarray] = {}  # same-oid overwrite chains
+        for req in full_reqs:
+            oid = req.object_id
+            gid, row = self._objects[oid]
+            rng = np.random.default_rng(
+                (oid * 1_000_003 + int(req.time * 1e6)) % (2**63)
             )
-        gid, row = self._objects[oid]
-        q = self._block_bytes
-        tracer = self.tracer
-        tid = tracer.begin_trace() if tracer.enabled else 0
-        rng = np.random.default_rng((oid * 1_000_003 + int(req.time * 1e6)) % (2**63))
-        new_data = rng.integers(0, 256, (self.code.k, q), dtype=np.uint8)
-        has_parity = self.family.rows > 1
-        if has_parity:
-            new_row = np.asarray(self.code.horizontal.encode(new_data))  # (n, q)
-            # Delta against the re-encoded OLD row (ground truth), not the
-            # stored block — a lost old block must still contribute its
-            # delta or the vertical parity goes stale for the whole column.
-            old_row = np.asarray(self.code.horizontal.encode(self._expected[oid]))
+            new_data = rng.integers(
+                0, 256, (self.code.k, self._block_bytes), dtype=np.uint8
+            )
+            # Delta against the re-encoded OLD row (ground truth), not
+            # the stored block — a lost old block must still contribute
+            # its delta or the vertical parity goes stale for the whole
+            # column. Within a window, chained overwrites of one object
+            # delta against the PREVIOUS overwrite in arrival order.
+            old_data = cur.get(oid, self._expected[oid])
+            cur[oid] = new_data
+            jobs.append(
+                {
+                    "req": req,
+                    "oid": oid,
+                    "gid": gid,
+                    "row": row,
+                    "new_data": new_data,
+                    "old_data": old_data,
+                    "enc_done": req.time,
+                }
+            )
+        if cfg.write_coalesce == "ragged":
+            windows = [(jobs, seal_groups)] if (jobs or seal_groups) else []
         else:
-            new_row = np.asarray(self.family.encode_group(new_data[None]))[0]
-            old_row = None
-        client = self._client_port(req)
-        nbytes = 0
-        done = req.time
+            windows = [([j], []) for j in jobs]
+            windows += [([], [g]) for g in seal_groups]
+        for wjobs, wseals in windows:
+            self._encode_window(wjobs, wseals, report)
+
+    def _append_small(
+        self, reqs: list[Request], report: GatewayReport
+    ) -> list[dict]:
+        """Journal and pack small PUTs (stripe sealing). The journal
+        append IS the ack: the payload rides the fabric to a
+        deterministic journal node and the PUT completes when it lands —
+        sealing and encoding happen behind the ack. Returns the seal
+        groups (``objects_per_group`` sealed rows each) this window
+        completed, ready for _encode_window."""
+        groups: list[dict] = []
+        t = self.family.objects_per_group
+        tracer = self.tracer
+        for req in reqs:
+            if self._sealer is None:
+                self._sealer = StripeSealer(self.code.k, self._block_bytes)
+            nb = max(1, min(int(req.nbytes), self._sealer.row_bytes))
+            rng = np.random.default_rng(
+                (req.object_id * 1_000_003 + int(req.time * 1e6) + nb)
+                % (2**63)
+            )
+            payload = rng.integers(0, 256, nb, dtype=np.uint8)
+            small_id = (req.object_id, round(req.time, 9))
+            self._pending_rows.extend(
+                self._sealer.append(small_id, payload, req.tenant)
+            )
+            while len(self._pending_rows) >= t:
+                rows = self._pending_rows[:t]
+                del self._pending_rows[:t]
+                gid = f"w{self._seal_group_seq}"
+                self._seal_group_seq += 1
+                groups.append(
+                    {
+                        "gid": gid,
+                        "rows": rows,
+                        "time": req.time,
+                        "tenant": req.tenant,
+                        "enc_done": req.time,
+                    }
+                )
+            jnode = zlib.crc32(repr(small_id).encode()) % self.store.num_nodes
+            tid = tracer.begin_trace() if tracer.enabled else 0
+            end = self.sim.transfer(
+                Transfer(
+                    self._client_port(req),
+                    jnode,
+                    nb,
+                    req.time,
+                    tenant=req.tenant,
+                    ctx=(tid, tid) if tracer.enabled else None,
+                )
+            )
+            self._put_inflight.setdefault(req.tenant, []).append(
+                (end, float(nb))
+            )
+            report.metrics.counter("small_puts", tenant=req.tenant).inc()
+            if tracer.enabled:
+                tracer.root_span(
+                    "request",
+                    req.time,
+                    end,
+                    tid,
+                    track=("tenant", req.tenant),
+                    object_id=req.object_id,
+                    kind="put",
+                    tenant=req.tenant,
+                    degraded=False,
+                    bytes=nb,
+                    cache_hits=0,
+                    fetch_at=req.time,
+                )
+                tracer.end_trace(tid, latency=end - req.time)
+            report.add_record(
+                RequestRecord(
+                    req.time, req.object_id, "put", end - req.time, False,
+                    nb, 0, 0, tenant=req.tenant,
+                )
+            )
+        return groups
+
+    def _dispatch_encode_units(
+        self, units, op_ready, op_tenant, op_tid, model_cost
+    ) -> list[float]:
+        """Dispatch one encode phase's LaunchUnits on the shared engine
+        pool under the decode path's exact conventions: modeled-cost
+        override scaled by each unit's launch fraction, launch-wide
+        readiness barrier (a physical launch's staging buffer holds
+        every op's tiles), owner-tenant billing. Returns per-op
+        completion times."""
+        op_done = list(op_ready)
+        if not units:
+            return op_done
+        if model_cost is not None:
+            units = [
+                replace(u, compute=model_cost * u.fraction) for u in units
+            ]
+        launch_ready: dict[int, float] = {}
+        for u in units:
+            r = max(op_ready[j] for j in u.op_indices)
+            launch_ready[u.launch_id] = max(
+                launch_ready.get(u.launch_id, 0.0), r
+            )
+        tracer = self.tracer
+        for u in sorted(units, key=lambda u: launch_ready[u.launch_id]):
+            j0 = u.op_indices[0]
+            ctx = None
+            if tracer.enabled and op_tid[j0]:
+                ctx = (
+                    op_tid[j0],
+                    op_tid[j0],
+                    {"kind": u.kind, "launch_id": u.launch_id},
+                )
+            _start, end = self._pool.dispatch(
+                launch_ready[u.launch_id],
+                u.compute,
+                tenant=op_tenant[j0],
+                ctx=ctx,
+            )
+            for j in u.op_indices:
+                op_done[j] = max(op_done[j], end)
+        return op_done
+
+    def _encode_window(
+        self, jobs: list[dict], seals: list[dict], report: GatewayReport
+    ) -> None:
+        """Execute one write ENCODE window end to end.
+
+        Phase EH (ops.gf256_ragged_encode): every full overwrite
+        re-encodes its NEW data and re-derives its OLD row's parity
+        columns through the RS generator, and every sealing row
+        generates its parity columns — all in ONE ragged megakernel
+        launch. Phase EV (ops.xor_ragged_encode): ONE fold op per parity
+        block the window touches (XOR associativity folds every
+        contributing PUT's old^new delta and the stored parity in a
+        single op) plus the sealing groups' vertical parity columns —
+        again one launch. Both phases are billed on the SHARED engine
+        pool (modeled ``encode_cost`` / ``decode_cost`` or measured
+        best-observed kernel time, exactly like decode), and each PUT's
+        client transfers start only once its encodes land — encoded
+        bytes cannot ride the fabric before they exist.
+
+        The parity read-modify-write verifies the stored digest BEFORE
+        folding: XOR-ing into silently-corrupt bytes and restamping
+        would LAUNDER the corruption under a fresh valid checksum. A
+        corrupt parity block is treated like an unavailable one —
+        quarantined and reconciled by repair."""
+        if not jobs and not seals:
+            return
+        cfg = self.config
+        n, k, q = self.code.n, self.code.k, self._block_bytes
+        has_parity = self.family.rows > 1
         parity_row = self.family.rows - 1
+        model_cost = (
+            cfg.encode_cost if cfg.encode_cost is not None else cfg.decode_cost
+        )
+        tracer = self.tracer
+        pool: dict = {}  # staging tokens -> host arrays (the fetch oracle)
+        for job in jobs:
+            job["tid"] = tracer.begin_trace() if tracer.enabled else 0
+        for seal in seals:
+            seal["tid"] = tracer.begin_trace() if tracer.enabled else 0
+            seal["matrix"] = np.zeros(
+                (self.family.rows, n, q), dtype=np.uint8
+            )
+            for r, (_seq, row_data, _exts) in enumerate(seal["rows"]):
+                seal["matrix"][r, :k] = row_data
+
+        # ---- phase EH: RS parity-row generation ------------------------------
+        eh_ops: list[DecodeOp] = []
+        eh_owner: list[tuple] = []
+        eh_ready: list[float] = []
+        eh_tenant: list[str] = []
+        eh_tid: list[int] = []
+        if has_parity:
+            pmat = rs.parity_matrix(n, k)
+            par_targets = tuple(range(k, n))
+
+            def stage_eh(tok0, data, gid, row, owner, at, tenant, tid):
+                srcs = []
+                for i in range(k):
+                    tok = tok0 + (i,)
+                    pool[tok] = data[i]
+                    srcs.append(tok)
+                eh_ops.append(
+                    DecodeOp("EH", gid, row, par_targets, tuple(srcs), pmat)
+                )
+                eh_owner.append(owner)
+                eh_ready.append(at)
+                eh_tenant.append(tenant)
+                eh_tid.append(tid)
+
+            for ji, job in enumerate(jobs):
+                for tag in ("new", "old"):
+                    stage_eh(
+                        ("j", ji, tag),
+                        job[f"{tag}_data"],
+                        job["gid"],
+                        job["row"],
+                        ("job", ji, tag),
+                        job["req"].time,
+                        job["req"].tenant,
+                        job["tid"],
+                    )
+            for si, seal in enumerate(seals):
+                for r in range(len(seal["rows"])):
+                    stage_eh(
+                        ("s", si, r),
+                        seal["matrix"][r, :k],
+                        seal["gid"],
+                        r,
+                        ("seal", si, r),
+                        seal["time"],
+                        seal["tenant"],
+                        seal["tid"],
+                    )
+        eh_results, eh_units = self.coalescer.execute_encode(
+            eh_ops, pool.__getitem__
+        )
+        eh_done = self._dispatch_encode_units(
+            eh_units, eh_ready, eh_tenant, eh_tid, model_cost
+        )
+        for oi, owner in enumerate(eh_owner):
+            out = eh_results[oi]
+            if owner[0] == "job":
+                _o, ji, tag = owner
+                job = jobs[ji]
+                rowbuf = np.empty((n, q), dtype=np.uint8)
+                rowbuf[:k] = job[f"{tag}_data"]
+                for col, arr in out.items():
+                    rowbuf[col] = arr
+                job[f"{tag}_row"] = rowbuf
+                job["enc_done"] = max(job["enc_done"], eh_done[oi])
+            else:
+                _o, si, r = owner
+                for col, arr in out.items():
+                    seals[si]["matrix"][r, col] = arr
+                seals[si]["enc_done"] = max(
+                    seals[si]["enc_done"], eh_done[oi]
+                )
+        if has_parity and cfg.verify:
+            # kernel-vs-oracle: the ragged EH output must equal the host
+            # generator exactly — wrong encodes may never reach a disk
+            for job in jobs:
+                want = np.asarray(self.code.horizontal.encode(job["new_data"]))
+                if not np.array_equal(job["new_row"], want):
+                    raise AssertionError(
+                        f"ragged encode mismatch for object {job['oid']}"
+                    )
+        if not has_parity:
+            # row families (rs / lrc): the object IS the whole codeword
+            # row — encode through the family generator host-side and
+            # bill one modeled launch per overwrite / seal on the pool
+            dur = (
+                model_cost
+                if model_cost is not None
+                else self._encode_launch_estimate()
+            )
+            for job in jobs:
+                job["new_row"] = np.asarray(
+                    self.family.encode_group(job["new_data"][None])
+                )[0]
+                job["old_row"] = None
+                if dur > 0.0:
+                    _s, end = self._pool.dispatch(
+                        job["req"].time, dur, tenant=job["req"].tenant
+                    )
+                    job["enc_done"] = max(job["enc_done"], end)
+            for seal in seals:
+                objs = np.stack([rd for (_sq, rd, _x) in seal["rows"]])
+                seal["matrix"] = np.asarray(self.family.encode_group(objs))
+                if dur > 0.0:
+                    _s, end = self._pool.dispatch(
+                        seal["time"], dur, tenant=seal["tenant"]
+                    )
+                    seal["enc_done"] = max(seal["enc_done"], end)
+
+        # ---- phase EV: XOR-delta folds + seal vertical parity ----------------
+        ev_ops: list[DecodeOp] = []
+        ev_owner: list[tuple] = []
+        ev_ready: list[float] = []
+        ev_tenant: list[str] = []
+        ev_tid: list[int] = []
+        if has_parity:
+            par_state: dict = {}
+            folds: dict = {}
+            for ji, job in enumerate(jobs):
+                gid = job["gid"]
+                cols = []
+                for c in range(n):
+                    par_key = (gid, parity_row, c)
+                    ok = par_state.get(par_key)
+                    if ok is None:
+                        # a lost parity column is reconciled later by
+                        # repair instead
+                        ok = self.store.available(par_key)
+                        if (
+                            ok
+                            and cfg.verify_checksums
+                            and not self.store.verify(par_key)
+                        ):
+                            self._note_corrupt(
+                                par_key,
+                                job["req"].time,
+                                report,
+                                source="write",
+                            )
+                            ok = False
+                        par_state[par_key] = ok
+                    if not ok:
+                        continue
+                    ent = folds.get(par_key)
+                    if ent is None:
+                        tok = ("p",) + par_key
+                        pool[tok] = self.store.blocks[par_key]
+                        ent = folds[par_key] = {
+                            "sources": [tok],
+                            "jobs": [],
+                            "ready": 0.0,
+                        }
+                    otok = ("o", ji, c)
+                    ntok = ("n", ji, c)
+                    pool[otok] = job["old_row"][c]
+                    pool[ntok] = job["new_row"][c]
+                    ent["sources"] += [otok, ntok]
+                    if ji not in ent["jobs"]:
+                        ent["jobs"].append(ji)
+                    ent["ready"] = max(ent["ready"], job["enc_done"])
+                    cols.append(c)
+                job["par_cols"] = cols
+            for par_key, ent in folds.items():
+                gidp, prow, c = par_key
+                ev_ops.append(
+                    DecodeOp(
+                        "EV", gidp, prow, (c,), tuple(ent["sources"]), None
+                    )
+                )
+                ev_owner.append(("fold", par_key, tuple(ent["jobs"])))
+                ev_ready.append(ent["ready"])
+                j0 = ent["jobs"][0]
+                ev_tenant.append(jobs[j0]["req"].tenant)
+                ev_tid.append(jobs[j0]["tid"])
+            for si, seal in enumerate(seals):
+                mat = seal["matrix"]
+                for c in range(n):
+                    srcs = []
+                    for r in range(len(seal["rows"])):
+                        tok = ("v", si, r, c)
+                        pool[tok] = mat[r, c]
+                        srcs.append(tok)
+                    ev_ops.append(
+                        DecodeOp(
+                            "EV",
+                            seal["gid"],
+                            parity_row,
+                            (c,),
+                            tuple(srcs),
+                            None,
+                        )
+                    )
+                    ev_owner.append(("seal", si, c))
+                    ev_ready.append(seal["enc_done"])
+                    ev_tenant.append(seal["tenant"])
+                    ev_tid.append(seal["tid"])
+        ev_results, ev_units = self.coalescer.execute_encode(
+            ev_ops, pool.__getitem__
+        )
+        ev_done = self._dispatch_encode_units(
+            ev_units, ev_ready, ev_tenant, ev_tid, model_cost
+        )
+        par_final: dict = {}
+        for oi, owner in enumerate(ev_owner):
+            val = ev_results[oi][ev_ops[oi].targets[0]]
+            if owner[0] == "fold":
+                par_final[owner[1]] = val
+                for ji in owner[2]:
+                    jobs[ji]["enc_done"] = max(
+                        jobs[ji]["enc_done"], ev_done[oi]
+                    )
+            else:
+                _o, si, c = owner
+                seals[si]["matrix"][parity_row, c] = val
+                seals[si]["enc_done"] = max(
+                    seals[si]["enc_done"], ev_done[oi]
+                )
+
+        # ---- commit: store writes, client transfers, housekeeping ------------
+        for par_key, val in par_final.items():
+            # each parity block is written ONCE with the window's fully
+            # folded value (the write re-digests it over its new bytes)
+            self.store.put_block(par_key, val)
+            self._corrupted_at.pop(par_key, None)
+            if self.cache is not None:
+                # only a parity block actually WRITTEN sheds its
+                # known-down tombstone; an unavailable one stays
+                # negative until repair or recovery brings it back
+                self.cache.purge_negative([par_key])
+        for job in jobs:
+            self._commit_overwrite(job, report)
+        for seal in seals:
+            self._commit_seal(seal, report)
+
+    def _commit_overwrite(self, job: dict, report: GatewayReport) -> None:
+        """Write one full-row overwrite's blocks and bill its client
+        transfers — starting at max(arrival, encode completion): the
+        fabric carries ENCODED bytes, which cannot exist before the
+        billed encode launches land."""
+        req = job["req"]
+        gid, row, oid = job["gid"], job["row"], job["oid"]
+        q = self._block_bytes
+        new_row = job["new_row"]
+        parity_row = self.family.rows - 1
+        client = self._client_port(req)
+        tid = job["tid"]
+        tracer = self.tracer
+        xfer_at = max(req.time, job["enc_done"])
+        inflight = self._put_inflight.setdefault(req.tenant, [])
+        done = xfer_at
+        nbytes = 0
+        par_cols = set(job.get("par_cols") or ())
         for c in range(self.code.n):
             old_key = (gid, row, c)
             par_key = (gid, parity_row, c)
-            # a lost parity column is reconciled later by repair instead
-            par_ok = has_parity and self.store.available(par_key)
-            if (
-                par_ok
-                and self.config.verify_checksums
-                and not self.store.verify(par_key)
-            ):
-                # the RMW just read corrupt parity bytes: do NOT apply
-                # the delta (that would launder the damage under a new
-                # digest) — reclassify as an erasure right here
-                self._note_corrupt(par_key, req.time, report, source="write")
-                par_ok = False
-            if par_ok:
-                delta = np.bitwise_xor(old_row[c], new_row[c])
-                self.store.put_block(
-                    par_key, np.bitwise_xor(self.store.blocks[par_key], delta)
-                )
-                # the write re-digests the block over its new bytes
-                self._corrupted_at.pop(par_key, None)
-                if self.cache is not None:
-                    # only a parity block actually WRITTEN sheds its
-                    # known-down tombstone; an unavailable one stays
-                    # negative until repair or recovery brings it back
-                    self.cache.purge_negative([par_key])
+            if c in par_cols:
                 end = self.sim.transfer(
                     Transfer(
                         client,
                         self.store.node_of(par_key),
                         int(q),
-                        req.time,
+                        xfer_at,
                         tenant=req.tenant,
                         ctx=(tid, tid) if tracer.enabled else None,
                     )
                 )
+                inflight.append((end, float(q)))
                 done = max(done, end)
                 nbytes += q
             self.store.put_block(old_key, new_row[c])
@@ -1785,19 +2303,20 @@ class ObjectGateway:
                     client,
                     self.store.node_of(old_key),
                     int(q),
-                    req.time,
+                    xfer_at,
                     tenant=req.tenant,
                     ctx=(tid, tid) if tracer.enabled else None,
                 )
             )
+            inflight.append((end, float(q)))
             done = max(done, end)
             nbytes += q
             if self.cache is not None:
                 self.cache.invalidate(old_key)
                 self.cache.invalidate(par_key)
                 # the data write re-placed its block on an alive node:
-                # that tombstone is stale (the parity one is handled in
-                # the write branch above, only when actually written)
+                # that tombstone is stale (the parity one is handled at
+                # the fold commit, only when actually written)
                 self.cache.purge_negative([old_key])
             # a client write supersedes any in-flight repair write-back
             self._healing.pop(old_key, None)
@@ -1807,7 +2326,8 @@ class ObjectGateway:
             self._lost_at.pop(old_key, None)
             if self.store.available(par_key):
                 self._lost_at.pop(par_key, None)
-        self._expected[oid] = new_data
+        self._expected[oid] = job["new_data"]
+        self._deleted.discard(oid)  # an overwrite resurrects a tombstone
         if tracer.enabled:
             tracer.root_span(
                 "request",
@@ -1821,13 +2341,114 @@ class ObjectGateway:
                 degraded=False,
                 bytes=nbytes,
                 cache_hits=0,
-                fetch_at=req.time,
+                fetch_at=xfer_at,
             )
             tracer.end_trace(tid, latency=done - req.time)
-        return RequestRecord(
-            req.time, oid, "put", done - req.time, False, nbytes, 0, 0,
-            tenant=req.tenant,
+        report.add_record(
+            RequestRecord(
+                req.time, oid, "put", done - req.time, False, nbytes, 0, 0,
+                tenant=req.tenant,
+            )
         )
+
+    def _commit_seal(self, seal: dict, report: GatewayReport) -> None:
+        """Place one sealed group (rows x n blocks) and register its
+        rows as synthetic objects above SEAL_OID_BASE, so sealed small
+        objects serve/plan/repair like any other group row."""
+        gid = seal["gid"]
+        mat = seal["matrix"]
+        q = self._block_bytes
+        if self.config.verify:
+            objs = np.stack([rd for (_sq, rd, _x) in seal["rows"]])
+            want = np.asarray(self.family.encode_group(objs))
+            if not np.array_equal(mat, want):
+                raise AssertionError(
+                    f"sealed-stripe encode mismatch for group {gid}"
+                )
+        self.store.put_group(gid, mat)
+        client = -(1 + zlib.crc32(gid.encode()) % self.config.num_client_ports)
+        xfer_at = max(seal["time"], seal["enc_done"])
+        inflight = self._put_inflight.setdefault(seal["tenant"], [])
+        tid = seal["tid"]
+        tracer = self.tracer
+        done = xfer_at
+        nbytes = 0
+        for r in range(mat.shape[0]):
+            for c in range(self.code.n):
+                end = self.sim.transfer(
+                    Transfer(
+                        client,
+                        self.store.node_of((gid, r, c)),
+                        int(q),
+                        xfer_at,
+                        tenant=seal["tenant"],
+                        ctx=(tid, tid) if tracer.enabled else None,
+                    )
+                )
+                inflight.append((end, float(q)))
+                done = max(done, end)
+                nbytes += q
+        members = []
+        for r, (seq, row_data, exts) in enumerate(seal["rows"]):
+            oid = SEAL_OID_BASE + seq
+            self._objects[oid] = (gid, r)
+            self._expected[oid] = row_data
+            self._sealed_rows[seq] = oid
+            self._sealed_extents.extend(exts)
+            members.append(oid)
+        self._groups[gid] = members
+        report.metrics.counter("stripes_sealed").inc()
+        report.metrics.counter("seal_bytes").inc(nbytes)
+        if tracer.enabled:
+            tracer.root_span(
+                "request",
+                seal["time"],
+                done,
+                tid,
+                track=("tenant", seal["tenant"]),
+                object_id=-1,
+                kind="seal",
+                tenant=seal["tenant"],
+                degraded=False,
+                bytes=nbytes,
+                cache_hits=0,
+                fetch_at=xfer_at,
+            )
+            tracer.end_trace(tid, latency=done - seal["time"])
+
+    def seal_flush(
+        self, at: float, report: GatewayReport | None = None
+    ) -> int:
+        """Drain the small-object packer: seal the partial open row
+        (zero-padded tail), pad out the last group with zero filler rows
+        (zero bytes are identity under both codes — mirrors
+        load_objects' padding), and encode/place what remains. Returns
+        the number of groups sealed."""
+        if self._sealer is None:
+            return 0
+        report = report if report is not None else GatewayReport()
+        self._pending_rows.extend(self._sealer.flush())
+        t = self.family.objects_per_group
+        if self._pending_rows:
+            while len(self._pending_rows) % t:
+                self._pending_rows.append(self._sealer.zero_row())
+        groups = []
+        while self._pending_rows:
+            rows = self._pending_rows[:t]
+            del self._pending_rows[:t]
+            gid = f"w{self._seal_group_seq}"
+            self._seal_group_seq += 1
+            groups.append(
+                {
+                    "gid": gid,
+                    "rows": rows,
+                    "time": at,
+                    "tenant": DEFAULT_TENANT,
+                    "enc_done": at,
+                }
+            )
+        self._encode_window([], groups, report)
+        return len(groups)
 
     # -- cluster fault events (scenario engine) ----------------------------------
     def _apply_cluster_event(self, evt, report: GatewayReport) -> bool:
@@ -2170,6 +2791,110 @@ class ObjectGateway:
             "unreadable_objects": unreadable,
         }
 
+    # -- write consistency audits -------------------------------------------------
+    def audit_parity(self) -> dict:
+        """Ground-truth parity freshness audit: re-encode every group
+        from the gateway's expected object contents and compare each
+        RESIDENT stored block byte-for-byte. A block whose stored digest
+        fails (silent corruption awaiting detection) counts as
+        ``corrupt``, NOT ``stale`` — staleness means the write path
+        forgot a delta; corruption is a modeled fault the integrity
+        plane will catch and repair. Zero ``stale`` after any churn
+        trace is the write dataplane's consistency contract."""
+        checked = stale = corrupt = 0
+        t = self.family.objects_per_group
+        k, q = self.code.k, self._block_bytes
+        for gid, members in self._groups.items():
+            objs = np.zeros((t, k, q), dtype=np.uint8)
+            for oid in members:
+                _g, r = self._objects[oid]
+                objs[r] = self._expected[oid]
+            want = np.asarray(self.family.encode_group(objs))
+            for r in range(self.family.rows):
+                for c in range(self.code.n):
+                    key = (gid, r, c)
+                    blk = self.store.blocks.get(key)
+                    if blk is None:
+                        continue
+                    checked += 1
+                    if not self.store.verify(key):
+                        corrupt += 1
+                    elif not np.array_equal(blk, want[r, c]):
+                        stale += 1
+        return {
+            "blocks_checked": checked,
+            "stale_blocks": stale,
+            "corrupt_blocks": corrupt,
+        }
+
+    def audit_sealed_stripes(self) -> dict:
+        """End-to-end sealed-extent audit through DEGRADED paths: plan
+        every sealed row against the RAW store (cache copies don't
+        count), host-execute the plan's reconstructions, and compare
+        each extent's bytes against the sha256 recorded at append time.
+        Run after a fault trace: zero ``extents_wrong`` means every
+        sealed byte decodes identically through whatever degraded path
+        the failure set forces."""
+        planner = DegradedReadPlanner(self.store, self.code, family=self.family)
+        rows_checked = rows_unreadable = rows_degraded = 0
+        extents = wrong = 0
+        rows_of: dict[int, list[Extent]] = {}
+        for ext in self._sealed_extents:
+            rows_of.setdefault(ext.row_seq, []).append(ext)
+        for seq, exts in sorted(rows_of.items()):
+            oid = self._sealed_rows.get(seq)
+            if oid is None:
+                continue  # row sealed but its group not yet placed
+            gid, row = self._objects[oid]
+            rows_checked += 1
+            try:
+                plan = planner.plan(gid, row)
+            except UnreadableObjectError:
+                rows_unreadable += 1
+                continue
+            if plan.degraded:
+                rows_degraded += 1
+            decoded: dict[int, np.ndarray] = {}
+            for op in plan.decodes:
+                decoded.update(self._host_decode(op))
+            flat = np.concatenate(
+                [
+                    np.asarray(
+                        decoded[c]
+                        if c in decoded
+                        else self.store.blocks[(gid, row, c)]
+                    ).ravel()
+                    for c in range(self.code.k)
+                ]
+            )
+            for ext in exts:
+                extents += 1
+                chunk = flat[ext.offset : ext.offset + ext.length]
+                if hashlib.sha256(chunk.tobytes()).hexdigest() != ext.digest:
+                    wrong += 1
+        return {
+            "rows_checked": rows_checked,
+            "rows_unreadable": rows_unreadable,
+            "rows_degraded": rows_degraded,
+            "extents_checked": extents,
+            "extents_wrong": wrong,
+            "extents_pending": (
+                self._sealer.pending_extents if self._sealer else 0
+            ),
+        }
+
+    def _host_decode(self, op: DecodeOp) -> dict[int, np.ndarray]:
+        """Execute one reconstruction host-side (audit path only — zero
+        simulated cost, raw store sources)."""
+        srcs = np.stack([self.store.blocks[s] for s in op.sources])
+        if op.coeffs is None:
+            out = srcs[0].copy()
+            for s in srcs[1:]:
+                np.bitwise_xor(out, s, out=out)
+            return {op.targets[0]: out}
+        out = np_matmul(np.asarray(op.coeffs, dtype=np.uint8), srcs)
+        return {col: out[i] for i, col in enumerate(op.targets)}
+
     # -- SLO admission estimator -------------------------------------------------
     def _decode_launch_estimate(self) -> float:
         """Expected scaled wall time of one batched decode launch, from
@@ -2180,6 +2905,47 @@ class ObjectGateway:
             return self.config.decode_cost
         st = self.coalescer.stats
         return st.compute_time / st.decode_calls if st.decode_calls else 0.0
+
+    def _encode_launch_estimate(self) -> float:
+        """Expected scaled wall time of one encode launch: the modeled
+        cost when set (``encode_cost``, falling back to ``decode_cost``),
+        else the coalescer's measured encode history, else the decode
+        estimate (optimistic cold start — admit early traffic)."""
+        cfg = self.config
+        if cfg.encode_cost is not None:
+            return cfg.encode_cost
+        if cfg.decode_cost is not None:
+            return cfg.decode_cost
+        st = self.coalescer.stats
+        if st.encode_calls:
+            return st.encode_compute_time / st.encode_calls
+        return self._decode_launch_estimate()
+
+    def _estimate_put_time(self, req: Request, now: float) -> float:
+        """Admission estimate for a PUT arriving ``now``: the tenant's
+        own in-flight write bytes + this PUT's write bytes serializing
+        at the tenant's guaranteed fair-share rate, plus (full
+        overwrites) the encode-engine wait and the window's two encode
+        launches (EH + EV). O(1) on purpose, like
+        ``_estimate_service_time`` — admission may not re-run the
+        simulation."""
+        tenant = req.tenant
+        pending = self._put_inflight.get(tenant)
+        live: list[tuple[float, float]] = []
+        if pending:
+            live = [e for e in pending if e[0] > now]
+            self._put_inflight[tenant] = live
+        rate = self.sim.weight_of(tenant) * self.profile.node_bandwidth
+        if req.nbytes is not None:
+            write_bytes = float(req.nbytes)
+        else:
+            per_col = 2 if self.family.rows > 1 else 1
+            write_bytes = float(self.code.n * per_col * self._block_bytes)
+        est = (sum(b for _e, b in live) + write_bytes) / rate
+        if req.nbytes is None:
+            est += max(0.0, self._pool.earliest_start(now) - now)
+            est += 2 * self._encode_launch_estimate()
+        return est
 
     def _estimate_service_time(
         self, plan: ReadPlan, now: float, tenant: str
@@ -2206,6 +2972,17 @@ class ObjectGateway:
             )
         share = self.sim.weight_of(tenant)
         est = net_backlog + fetch_bytes / (share * self.profile.node_bandwidth)
+        # write pressure: the tenant's in-flight PUT bytes share the same
+        # fair-share pipe its fetches ride — reads queue behind committed
+        # writes, so admission must charge them (no puts => term is 0 and
+        # read-only traces price identically to the pre-write estimator)
+        pending = self._put_inflight.get(tenant)
+        if pending:
+            live = [e for e in pending if e[0] > now]
+            self._put_inflight[tenant] = live
+            est += sum(b for _e, b in live) / (
+                share * self.profile.node_bandwidth
+            )
         if self.config.pipeline == SERIAL:
             # serial mode gates every fetch on the previous window's
             # completion — under load that barrier IS the latency

@@ -27,8 +27,13 @@ DEFAULT_TENANT = "foreground"
 class Request:
     time: float  # arrival (seconds since epoch 0 of the trace)
     object_id: int
-    kind: str = "get"  # get | put
+    kind: str = "get"  # get | put | delete
     tenant: str = DEFAULT_TENANT  # fabric/SLO tenant this request bills to
+    # PUT payload size in bytes. None => a full-row overwrite of the
+    # object's k blocks (the pre-write-dataplane PUT). A value marks a
+    # SMALL-object put: the gateway journals the payload and packs it
+    # with other small objects into one codeword row (stripe sealing).
+    nbytes: int | None = None
 
 
 @dataclass(frozen=True)
@@ -109,6 +114,14 @@ class WorkloadConfig:
     zipf_s: float = 1.1  # popularity exponent
     put_fraction: float = 0.0  # fraction of requests that are PUTs
     seed: int = 0
+    # write-churn shape: deletes tombstone the drawn object; a fraction
+    # of PUTs may be SMALL (sealed into shared stripes) instead of
+    # full-row overwrites. All three default off, so existing traces are
+    # byte-identical (the extra rng draws happen after every preexisting
+    # draw in the stream).
+    delete_fraction: float = 0.0  # fraction of requests that are DELETEs
+    small_put_fraction: float = 0.0  # fraction of PUTs that are small
+    small_put_bytes: int = 256  # payload size of a small put
 
 
 def zipf_probs(num_objects: int, s: float) -> np.ndarray:
@@ -129,15 +142,29 @@ def generate_requests(
     perm = rng.permutation(cfg.num_objects)
     ranks = rng.choice(cfg.num_objects, size=cfg.num_requests, p=zipf_probs(cfg.num_objects, cfg.zipf_s))
     kinds = np.where(rng.random(cfg.num_requests) < cfg.put_fraction, "put", "get")
-    return [
-        Request(
-            time=float(times[i]),
-            object_id=int(perm[ranks[i]]),
-            kind=str(kinds[i]),
-            tenant=tenant,
+    # churn draws LAST: a zero-fraction config consumes extra rng stream
+    # only after every preexisting field is decided, so old traces stay
+    # byte-identical
+    deletes = rng.random(cfg.num_requests) < cfg.delete_fraction
+    smalls = rng.random(cfg.num_requests) < cfg.small_put_fraction
+    out = []
+    for i in range(cfg.num_requests):
+        kind = "delete" if deletes[i] else str(kinds[i])
+        nbytes = (
+            int(cfg.small_put_bytes)
+            if (kind == "put" and smalls[i])
+            else None
         )
-        for i in range(cfg.num_requests)
-    ]
+        out.append(
+            Request(
+                time=float(times[i]),
+                object_id=int(perm[ranks[i]]),
+                kind=kind,
+                tenant=tenant,
+                nbytes=nbytes,
+            )
+        )
+    return out
 
 
 @dataclass(frozen=True)
@@ -156,6 +183,9 @@ class TenantProfile:
     zipf_s: float = 1.1
     put_fraction: float = 0.0
     slo_p99: float | None = None
+    delete_fraction: float = 0.0
+    small_put_fraction: float = 0.0
+    small_put_bytes: int = 256
 
     def workload(self, num_objects: int, num_requests: int, seed: int) -> WorkloadConfig:
         return WorkloadConfig(
@@ -165,6 +195,9 @@ class TenantProfile:
             zipf_s=self.zipf_s,
             put_fraction=self.put_fraction,
             seed=seed,
+            delete_fraction=self.delete_fraction,
+            small_put_fraction=self.small_put_fraction,
+            small_put_bytes=self.small_put_bytes,
         )
 
 

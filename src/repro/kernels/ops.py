@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.kernels import gf256_matmul as _gfk
 from repro.kernels import ragged_decode as _rdk
+from repro.kernels import ragged_encode as _rek
 from repro.kernels import xor_parity as _xpk
 from repro.kernels.backend import resolve_interpret
 
@@ -157,6 +158,52 @@ def xor_ragged(
     if tile_block is None:
         tile_block = _rdk.tile_block_for(c, kk, tn, interpret)
     return _rdk.ragged_xor_tiles(
+        data.astype(jnp.uint8), tile_block=tile_block, interpret=interpret
+    )
+
+
+def gf256_ragged_encode(
+    mc: np.ndarray,
+    data: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    packed: bool = False,
+    tile_block: int | None = None,
+) -> jnp.ndarray:
+    """Ragged ENCODE megakernel entry: ONE launch over C fixed-width
+    tiles of MIXED GF(256) parity encodes (a PUT window's RS parity-row
+    generation, coefficients from coding/rs.py's ``parity_matrix`` — see
+    kernels/ragged_encode.py). Same tile contract as ``gf256_ragged``
+    but a separate jit signature pool, so encode K-cap growth never
+    retraces the decode kernels."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    if tile_block is None:
+        tile_block = _rdk.tile_block_for(c, kk, tn, interpret)
+    return _rek.ragged_gf256_encode_tiles(
+        jnp.asarray(mc),
+        data.astype(jnp.uint8),
+        tile_block=tile_block,
+        interpret=interpret,
+        packed=packed,
+    )
+
+
+def xor_ragged_encode(
+    data: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    tile_block: int | None = None,
+) -> jnp.ndarray:
+    """Ragged ENCODE megakernel entry for XOR-delta parity folds: data
+    (C, K, TN) per-tile slabs (stored parity + old/new row deltas, any
+    fold depth) -> (C, TN), one launch per PUT window. Zero-padded K
+    rows / tail bytes are the XOR identity."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    if tile_block is None:
+        tile_block = _rdk.tile_block_for(c, kk, tn, interpret)
+    return _rek.ragged_xor_encode_tiles(
         data.astype(jnp.uint8), tile_block=tile_block, interpret=interpret
     )
 

@@ -1,0 +1,110 @@
+"""Pallas TPU kernels: descriptor-driven ragged ENCODE megakernel.
+
+The write-path mirror of kernels/ragged_decode.py (PR 5): a batching
+window's PUT work is a mixed bag of GF(256) parity ENCODES (the
+systematic RS parity rows of ``coding/rs.py`` — parities = P @ data)
+and XOR-delta parity FOLDS (the single-parity-check vertical code of
+``coding/spc.py`` — new_parity = stored ^ old_row ^ new_row, with any
+number of folded contributions thanks to XOR associativity). Both are
+the SAME tile algebra the decode megakernel runs — a GF(256) product
+with per-tile coefficient bit-planes, and an XOR reduction over the K
+source axis — so the kernel bodies are shared with ragged_decode and
+only the jit entry points differ.
+
+Why separate entry points at all: the coalescer's O(1)-signatures-per-
+kind guarantee is *observable* (``jit_entries_by_kind``), and encode
+traffic must not alias decode signatures — a PUT-heavy window growing
+the encode K cap may never retrace the decode kernels, and the bench
+gate "<= 2 live signatures per ENCODE kind" must be countable on its
+own. Descriptor layout, chunk rungs (``CHUNK_SMALL``/``CHUNK_BIG``),
+tile-width autotuning, and the zero-padding-is-identity staging
+contract are all inherited from ragged_decode verbatim — see that
+module's docstring for the full contract.
+
+Host-side coefficient source: ``coding/rs.py``'s ``parity_matrix(n, k)``
+rows feed the GF encode tiles ("EH" ops in gateway/coalescer.py);
+the XOR fold ("EV") needs no coefficients.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.ragged_decode import (  # noqa: F401  (re-exported contract)
+    CHUNK_BIG,
+    CHUNK_SMALL,
+    DEFAULT_TILE_N,
+    _ragged_gf_kernel,
+    _ragged_gf_kernel_packed,
+    _ragged_xor_kernel,
+    chunk_sizes,
+    tile_block_for,
+)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_block", "interpret", "packed")
+)
+def ragged_gf256_encode_tiles(
+    mc: jnp.ndarray,
+    data: jnp.ndarray,
+    *,
+    tile_block: int,
+    interpret: bool | None = None,
+    packed: bool = False,
+) -> jnp.ndarray:
+    """One descriptor-driven launch over C tiles of mixed GF(256) parity
+    ENCODES: mc (C, K, 8) per-tile generator-row bit-planes, data
+    (C, K, TN) source-data tiles -> (C, TN) parity tiles.
+    C % tile_block == 0; semantics identical to ragged_gf256_tiles, as a
+    separately traced signature pool."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    assert mc.shape == (c, kk, 8), (mc.shape, data.shape)
+    assert c % tile_block == 0, (c, tile_block)
+    kern = (
+        _ragged_gf_kernel_packed
+        if (packed and tn % 4 == 0)
+        else _ragged_gf_kernel
+    )
+    return pl.pallas_call(
+        functools.partial(kern, kk=kk),
+        out_shape=jax.ShapeDtypeStruct((c, tn), jnp.uint8),
+        grid=(c // tile_block,),
+        in_specs=[
+            pl.BlockSpec((tile_block, kk, 8), lambda j: (j, 0, 0)),
+            pl.BlockSpec((tile_block, kk, tn), lambda j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_block, tn), lambda j: (j, 0)),
+        interpret=interpret,
+    )(mc, data)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_block", "interpret"))
+def ragged_xor_encode_tiles(
+    data: jnp.ndarray,
+    *,
+    tile_block: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One descriptor-driven launch over C tiles of mixed XOR-delta
+    parity folds: data (C, K, TN) -> (C, TN), XOR over the K axis
+    (stored parity + any number of old/new row contributions; zero-
+    padded K rows and tile tails are the XOR identity).
+    C % tile_block == 0."""
+    interpret = resolve_interpret(interpret)
+    c, kk, tn = data.shape
+    assert c % tile_block == 0, (c, tile_block)
+    return pl.pallas_call(
+        functools.partial(_ragged_xor_kernel, kk=kk),
+        out_shape=jax.ShapeDtypeStruct((c, tn), jnp.uint8),
+        grid=(c // tile_block,),
+        in_specs=[pl.BlockSpec((tile_block, kk, tn), lambda j: (j, 0, 0))],
+        out_specs=pl.BlockSpec((tile_block, tn), lambda j: (j, 0)),
+        interpret=interpret,
+    )(data)

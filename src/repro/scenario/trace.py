@@ -501,6 +501,10 @@ def scenario_requests(
         [1.0] + [trace.rate_multiplier(t) for t in boundaries]
     )
     rng = np.random.default_rng(wl.seed)
+    # churn kinds (delete / small-put) ride a SEPARATE derived stream:
+    # drawing them from ``rng`` would shift every draw after the first
+    # candidate and re-time the whole preexisting trace
+    churn_rng = np.random.default_rng((wl.seed ^ 0x5EA1C0DE) % (2**31))
     perm = rng.permutation(wl.num_objects)
     probs = zipf_probs(wl.num_objects, wl.zipf_s)
     out: list[Request] = []
@@ -510,14 +514,23 @@ def scenario_requests(
         accept = float(rng.random())  # drawn unconditionally: stream stability
         rank = int(rng.choice(wl.num_objects, p=probs))
         is_put = float(rng.random()) < wl.put_fraction
+        # unconditional for the same stream-stability reason as accept
+        is_delete = float(churn_rng.random()) < wl.delete_fraction
+        is_small = float(churn_rng.random()) < wl.small_put_fraction
         if accept >= wl.arrival_rate * trace.rate_multiplier(t) / peak:
             continue
+        kind = "delete" if is_delete else ("put" if is_put else "get")
         out.append(
             Request(
                 time=t,
                 object_id=int(perm[rank]),
-                kind="put" if is_put else "get",
+                kind=kind,
                 tenant=tenant,
+                nbytes=(
+                    int(wl.small_put_bytes)
+                    if (kind == "put" and is_small)
+                    else None
+                ),
             )
         )
     return out

@@ -14,9 +14,12 @@ fail-slow, the structural extra-byte budget, and corruption-as-erasure
 detection/repair counters), the PR 8 code-family bake-off block
 (gateway_bakeoff: per-family repair bandwidth / repair time / degraded
 p99 / storage overhead under the shared Weibull fault trace plus the
-CORE-vs-RS repair ratio and clean-path byte identity), and skips
-cleanly when the snapshot has not been generated in this checkout
-(e.g. a fresh clone running only the unit suite).
+CORE-vs-RS repair ratio and clean-path byte identity), and the PR 9
+write-dataplane block (gateway_writes: ragged-vs-sync PUT throughput
+under modeled encode billing, jit signatures per encode kind, stripe
+sealing, and the churn-audit consistency counters), and skips cleanly
+when the snapshot has not been generated in this checkout (e.g. a
+fresh clone running only the unit suite).
 """
 
 from __future__ import annotations
@@ -47,6 +50,7 @@ TOP_LEVEL_KEYS = {
     "gateway_obs",
     "gateway_integrity",
     "gateway_bakeoff",
+    "gateway_writes",
 }
 
 PIPELINE_KEYS = {
@@ -150,6 +154,31 @@ BAKEOFF_KEYS = {
 }
 
 FAMILY_NAMES = {"core", "rs", "lrc"}
+
+# PR-9 write-dataplane block: ragged ENCODE megakernel vs the per-PUT
+# sync baseline plus the churn consistency audit.
+WRITES_KEYS = {
+    "put_rps",
+    "speedup",
+    "put_p50_ms",
+    "put_p99_ms",
+    "encode_launches",
+    "encode_ops",
+    "jit_per_encode_kind",
+    "stripes_sealed",
+    "deletes",
+    "churn_audit",
+}
+
+CHURN_AUDIT_KEYS = {
+    "fault_events",
+    "blocks_checked",
+    "stale_blocks",
+    "extents_checked",
+    "extents_wrong",
+    "blocks_lost",
+    "replay_identical",
+}
 
 
 @pytest.fixture(scope="module")
@@ -320,6 +349,37 @@ def test_gateway_bakeoff_values_sane(bench):
     ovh = bak["storage_overhead"]
     assert ovh["core"] > ovh["rs"] == ovh["lrc"]
     assert all(v > 0 for v in bak["degraded_p99_ms"].values())
+
+
+def test_gateway_writes_keys(bench):
+    wr = bench["gateway_writes"]
+    missing = WRITES_KEYS - set(wr)
+    assert not missing, f"gateway_writes lost stable keys: {sorted(missing)}"
+    for section in ("put_rps", "put_p50_ms", "put_p99_ms", "encode_launches"):
+        assert {"sync", "ragged"} <= set(wr[section]), section
+    assert {"EH", "EV"} <= set(wr["jit_per_encode_kind"])
+    assert CHURN_AUDIT_KEYS <= set(wr["churn_audit"])
+
+
+def test_gateway_writes_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): PUT latency is billed sim time
+    (> 0 — encode launches and transfers are never free), the ragged
+    encode path beats the sync baseline >= 1.5x, the live jit set stays
+    <= 2 signatures per encode kind, and the churn audit is clean."""
+    wr = bench["gateway_writes"]
+    assert wr["put_rps"]["sync"] > 0 and wr["put_rps"]["ragged"] > 0
+    assert wr["speedup"] >= 1.5
+    assert wr["put_p50_ms"]["ragged"] > 0 and wr["put_p99_ms"]["ragged"] > 0
+    jit = wr["jit_per_encode_kind"]
+    assert 0 < jit["EH"] <= 2 and 0 < jit["EV"] <= 2
+    assert wr["stripes_sealed"] > 0
+    ca = wr["churn_audit"]
+    assert ca["fault_events"] > 0 and ca["extents_checked"] > 0
+    assert ca["stale_blocks"] == 0
+    assert ca["extents_wrong"] == 0
+    assert ca["blocks_lost"] == 0
+    assert ca["replay_identical"] is True
 
 
 def test_gateway_tenants_values_sane(bench):

@@ -67,6 +67,19 @@
 # deletes tombstone in place. audit_parity() / audit_sealed_stripes()
 # are the end-to-end churn consistency audits (zero stale parity, every
 # sealed extent byte-identical through degraded decode).
+#
+# Multi-gateway scale-out (metadata.py + sharding.py): the namespace
+# metadata plane (stripe maps, object->shard consistent-hash directory,
+# ground truth, tombstones, fault bookkeeping, cache-coherence fan-out)
+# is split from the per-shard data path, so N ObjectGateway shards run
+# over ONE shared BlockStore/NetSimulator. ShardedGateway is the front
+# door: requests route by crc32 consistent hash (vnodes per shard),
+# each shard keeps its own cache/engine pool/admission/repair fixer
+# (fabric lanes tagged "tenant@s<id>", weights inherited from the base
+# tenant), cluster events apply once with repair ownership split by
+# group hash, and ShardFailEvent kills a shard mid-run — storage is
+# untouched, so its namespace ranges fail over to survivors with zero
+# lost blocks. serve() returns GatewayReport.merged across shards.
 from repro.gateway.cache import CacheStats, LRUBlockCache
 from repro.gateway.coalescer import (
     PAD_LADDER,
@@ -87,7 +100,9 @@ from repro.gateway.planner import (
     ReadPlan,
     UnreadableObjectError,
 )
+from repro.gateway.metadata import MetadataPlane, ShardDirectory
 from repro.gateway.sealer import Extent, StripeSealer
+from repro.gateway.sharding import ShardedGateway
 from repro.gateway.workload import (
     CapacityLossEvent,
     CorruptionEvent,
@@ -95,6 +110,7 @@ from repro.gateway.workload import (
     FailureEvent,
     NodeRecoverEvent,
     Request,
+    ShardFailEvent,
     SlowNicEvent,
     SlowNodeEvent,
     TenantProfile,
@@ -127,8 +143,12 @@ __all__ = [
     "LaunchUnit",
     "GatewayConfig",
     "GatewayReport",
+    "MetadataPlane",
     "ObjectGateway",
     "RequestRecord",
+    "ShardDirectory",
+    "ShardFailEvent",
+    "ShardedGateway",
     "DecodeOp",
     "DegradedReadPlanner",
     "Extent",

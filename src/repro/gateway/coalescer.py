@@ -198,6 +198,17 @@ class DecodeCoalescer:
         self._tile_n: dict[str, int] = {}
         self._staging: dict[tuple, np.ndarray] = {}
 
+    def tiles_for(self, length: int, kind: str = "H") -> int:
+        """Descriptor tiles one ``length``-byte output row costs at the
+        current tile width (the ratcheted width once seen, else the
+        same fit formula ``_execute_ragged_kind`` would pick). Used by
+        per-tile modeled billing to price decode work that does not go
+        through ``execute`` (background repair's codec)."""
+        tn = self._tile_n.get(kind)
+        if tn is None:
+            tn = min(_rdk.DEFAULT_TILE_N, _next_pow2(max(1, int(length))))
+        return -(-int(length) // tn)
+
     def jit_entries_by_kind(self) -> dict[str, int]:
         """Distinct traced signatures per decode kind — the megakernel's
         O(1)-per-kind guarantee, observable (tests/test_ragged_decode)."""

@@ -116,6 +116,7 @@ from repro.core.product_code import CoreCode, CoreCodec
 from repro.core.recoverability import is_recoverable
 from repro.gateway.cache import LRUBlockCache
 from repro.gateway.coalescer import DecodeCoalescer
+from repro.gateway.metadata import MetadataPlane
 from repro.gateway.planner import (
     DecodeOp,
     DegradedReadPlanner,
@@ -145,6 +146,7 @@ from repro.storage.netmodel import (
     REPAIR_TENANT,
     PortTimeline,
     Transfer,
+    shard_tenant,
 )
 from repro.storage.repair import BlockFixer, PacingController, Scrubber
 
@@ -203,6 +205,18 @@ class GatewayConfig:
     # comparisons) with no cold-vs-warm-jit sensitivity. None (default):
     # measured, best-observed-per-signature billing.
     decode_cost: float | None = None
+    # Modeled decode cost PER DESCRIPTOR TILE: bills each megakernel
+    # launch unit ``cost x its tile count``, so billed compute scales
+    # with the work actually launched instead of the launch count.
+    # decode_cost (per launch) models a fixed-cost accelerator
+    # dispatch; per-tile models a throughput-bound accelerator — the
+    # right replayable model when comparing configurations that split
+    # the SAME op stream into DIFFERENT window sizes (the sharded
+    # scale-out bench: N shards cut windows ~N ways, and per-launch
+    # billing would charge the cluster N times for the same tiles).
+    # Requires coalesce="ragged" (bucketed units carry no tile counts)
+    # and is mutually exclusive with decode_cost.
+    decode_cost_per_tile: float | None = None
     # -- write dataplane -------------------------------------------------------
     # Modeled ENCODE cost per launch (same semantics as decode_cost);
     # None falls back to decode_cost, and to the coalescer's measured
@@ -276,6 +290,12 @@ class GatewayConfig:
     # row geometry; planner candidates, repair plans, PUT re-encode, and
     # the durability audit all go through repro.gateway.planner.CodeFamily.
     code_family: str = "core"
+    # -- placement / scale-out -------------------------------------------------
+    # Rack size for failure-domain-aware placement: nodes [i*r, (i+1)*r)
+    # form rack i, and stripe placement guarantees any single rack
+    # failure costs each row and each column at most one block (XORing
+    # Elephants, 1301.3791). None keeps node-level anti-colocation only.
+    nodes_per_rack: int | None = None
 
 
 @dataclass
@@ -472,6 +492,55 @@ class GatewayReport:
             else 0.0
         )
 
+    # -- cross-shard aggregation ------------------------------------------------
+    @classmethod
+    def merged(cls, reports: list["GatewayReport"]) -> "GatewayReport":
+        """One logical report over N shard reports: records are replayed
+        through ``add_record`` in (time, object, kind) order so every
+        derived aggregate — metrics counters, latency sketches, the
+        throughput window, the pacer's ``recent`` deque — is rebuilt
+        exactly as a single gateway would have built it; sample
+        containers and rejection maps are summed. Existing bench blocks
+        read the merged report through the same pinned keys."""
+        for r in reports:
+            if not r.record_requests:
+                raise ValueError(
+                    "GatewayReport.merged needs per-request records; "
+                    "run shards with record_requests=True"
+                )
+        out = cls(record_requests=True)
+        for rec in sorted(
+            (rec for r in reports for rec in r.records),
+            key=lambda rec: (rec.time, rec.object_id, rec.kind),
+        ):
+            out.add_record(rec)
+        for r in reports:
+            out.repair_reports.extend(r.repair_reports)
+            # jit entries: shards run private coalescers over identical
+            # kernels — the MAX is the per-process signature footprint
+            out.jit_cache_entries = max(out.jit_cache_entries, r.jit_cache_entries)
+            out.decode_launches += r.decode_launches
+            for t, n in r.rejections.items():
+                out.rejections[t] = out.rejections.get(t, 0) + n
+            for t, n in r.put_rejections.items():
+                out.put_rejections[t] = out.put_rejections.get(t, 0) + n
+            for s in r.mttr_samples:
+                out.mttr_samples.append(s)
+            for s in r.restored_samples:
+                out.restored_samples.append(s)
+            for s in r.corruption_latency:
+                out.corruption_latency.append(s)
+            for p in r.pacing:
+                out.pacing.append(p)
+        n_windows = sum(
+            r.decode_launches / r.launches_per_window
+            for r in reports
+            if r.launches_per_window > 0
+        )
+        if n_windows > 0:
+            out.launches_per_window = out.decode_launches / n_windows
+        return out
+
 
 class EnginePool:
     """``num_engines`` parallel simulated decode-engine timelines with
@@ -571,7 +640,15 @@ class EnginePool:
 
 
 class ObjectGateway:
-    """Serves a trace of PUT/GET requests over a BlockStore cluster."""
+    """Serves a trace of PUT/GET requests over a BlockStore cluster.
+
+    Standalone by default: constructs its own store, fabric and
+    (private) metadata plane. Under ``ShardedGateway`` N instances are
+    built over ONE shared ``store``/``sim``/``meta`` with distinct
+    ``shard_id``s: namespace maps and fault bookkeeping alias the
+    plane's shared containers, fabric submissions are tagged with the
+    shard's tenant lane, and cache-coherence events fan out to every
+    registered shard cache through the plane."""
 
     def __init__(
         self,
@@ -579,6 +656,11 @@ class ObjectGateway:
         profile: ClusterProfile,
         num_nodes: int,
         config: GatewayConfig | None = None,
+        *,
+        store: BlockStore | None = None,
+        sim: NetSimulator | None = None,
+        meta: MetadataPlane | None = None,
+        shard_id: int | None = None,
     ):
         self.code = code
         self.codec = CoreCodec(code)
@@ -616,6 +698,22 @@ class ObjectGateway:
                 f"encode_cost must be positive or None, got "
                 f"{self.config.encode_cost}"
             )
+        if self.config.decode_cost_per_tile is not None:
+            if self.config.decode_cost_per_tile <= 0:
+                raise ValueError(
+                    f"decode_cost_per_tile must be positive or None, got "
+                    f"{self.config.decode_cost_per_tile}"
+                )
+            if self.config.decode_cost is not None:
+                raise ValueError(
+                    "decode_cost and decode_cost_per_tile are mutually "
+                    "exclusive timing models"
+                )
+            if self.config.coalesce != "ragged":
+                raise ValueError(
+                    "decode_cost_per_tile requires coalesce='ragged' "
+                    "(bucketed launch units carry no tile counts)"
+                )
         if self.config.write_coalesce not in ("ragged", "sync"):
             raise ValueError(
                 f"write_coalesce must be 'ragged' or 'sync', got "
@@ -679,19 +777,42 @@ class ObjectGateway:
             if self.config.tracing
             else NULL_TRACER
         )
-        self.store = BlockStore(num_nodes=num_nodes)
-        self.sim = NetSimulator(
-            profile,
-            background_share=self.config.background_share,
-            mode=self.config.fabric,
-            tenant_weights=self.config.tenant_weights,
+        # scale-out wiring: shard_id tags this gateway's fabric tenants
+        # and scopes its repair ownership; store/sim/meta may be shared
+        # across N shards (ShardedGateway) or private (standalone).
+        self.shard_id = shard_id
+        self.meta = meta if meta is not None else MetadataPlane()
+        self.store = (
+            store
+            if store is not None
+            else BlockStore(
+                num_nodes=num_nodes, nodes_per_rack=self.config.nodes_per_rack
+            )
         )
-        self.sim.tracer = self.tracer
+        if sim is not None:
+            self.sim = sim
+        else:
+            self.sim = NetSimulator(
+                profile,
+                background_share=self.config.background_share,
+                mode=self.config.fabric,
+                tenant_weights=self.config.tenant_weights,
+            )
+        if sim is None or self.tracer.enabled:
+            # don't clobber a shared fabric's tracer with a shard's
+            # NULL_TRACER; a tracing shard may claim it explicitly
+            self.sim.tracer = self.tracer
+        # this shard's fabric lane for background repair ("repair@s2";
+        # plain "repair" standalone). The per-shard ENGINE pool keeps
+        # the base name — pools are private, lanes only matter on the
+        # shared fabric.
+        self._repair_tenant = shard_tenant(REPAIR_TENANT, shard_id)
         self.cache = (
             LRUBlockCache(self.config.cache_bytes, policy=self.config.cache_policy)
             if self.config.cache_bytes
             else None
         )
+        self.meta.register_cache(self.cache)
         self.planner = DegradedReadPlanner(
             self.store, code, available_fn=self._available, family=self.family
         )
@@ -707,22 +828,25 @@ class ObjectGateway:
             profile,
             mode="core",
             sim=self.sim,
-            priority=REPAIR_TENANT,
+            priority=self._repair_tenant,
             on_block_repaired=self._on_block_repaired,
             family=self.family,
         )
         self.fixer.tracer = self.tracer
-        self._objects: dict[int, tuple[str, int]] = {}  # object -> (group, row)
-        self._groups: dict[str, list[int]] = {}
-        self._expected: dict[int, np.ndarray] = {}  # ground truth (k, q)
-        self._block_bytes = 0
+        # namespace maps + fault bookkeeping ALIAS the metadata plane's
+        # containers (mutated in place, never rebound): every shard over
+        # one plane sees one namespace. A standalone gateway's private
+        # plane makes these its own state, exactly as before.
+        self._objects = self.meta.objects  # object -> (group, row)
+        self._groups = self.meta.groups
+        self._expected = self.meta.expected  # ground truth (k, q)
         # Repaired blocks become visible only once the repair's fabric
         # transfers complete: key -> completion time of its write-back.
-        self._healing: dict[BlockKey, float] = {}
+        self._healing = self.meta.healing
         # Cache entries to re-price once their block's heal completes —
         # re-pricing at repair time would demote a reconstruction that is
         # still the only copy reads dated before heal completion can use.
-        self._reprice_on_heal: set[BlockKey] = set()
+        self._reprice_on_heal = self.meta.reprice_on_heal
         # Simulated time at which each cached block came into existence
         # (fetch completion / decode completion). A cache hit may not be
         # served before it: blocks are cached at host flush time, and
@@ -745,12 +869,12 @@ class ObjectGateway:
         self._window_free = 0.0
         # Scenario bookkeeping: when each currently-unavailable block was
         # lost (feeds MTTR samples on heal/recover), persisted across
-        # serve() calls like _healing.
-        self._lost_at: dict[BlockKey, float] = {}
+        # serve() calls like _healing. Shared: a loss is a cluster fact.
+        self._lost_at = self.meta.lost_at
         # groups whose missing set repair provably cannot shrink right
         # now (unrecoverable clusters): skipped by continuation runs
         # until their failure set changes
-        self._repair_stuck: dict[str, frozenset] = {}
+        self._repair_stuck = self.meta.repair_stuck
         # SLO-aware repair pacing: observed foreground p99 headroom
         # modulates the repair tenant's fabric weight and engine share.
         self._pacer = (
@@ -775,7 +899,7 @@ class ObjectGateway:
         # when each still-undetected silent corruption was injected —
         # omniscient metrics-only bookkeeping (detection latency); the
         # serving path itself only ever learns of corruption via verify
-        self._corrupted_at: dict[BlockKey, float] = {}
+        self._corrupted_at = self.meta.corrupted_at
         # per-tenant hedge budget ledger: cumulative speculative fabric
         # bytes vs cumulative primary fetch bytes (the <= hedge_budget
         # structural cap), persisted across windows and serve() calls
@@ -789,7 +913,7 @@ class ObjectGateway:
         # group parity remains a consistent codeword — eager block
         # removal would force a parity RMW per delete) until a future GC
         # reclaims whole groups; GETs answer not-found.
-        self._deleted: set[int] = set()
+        self._deleted = self.meta.deleted
         # per-tenant in-flight write work: (completion time, bytes) of
         # every PUT fabric transfer still unfinished — the admission
         # estimator's view of write pressure (GETs and PUTs both pay it)
@@ -802,6 +926,36 @@ class ObjectGateway:
         self._sealed_extents: list[Extent] = []
         self._sealed_rows: dict[int, int] = {}  # row_seq -> object id
         self._seal_group_seq = 0
+        # sealed groups/objects register in the SHARED namespace, so a
+        # shard's mints must not collide with a sibling's: group ids get
+        # a shard infix ("w1.3") and synthetic oids a per-shard stripe
+        # of the id space above SEAL_OID_BASE. Standalone stays "w3" /
+        # SEAL_OID_BASE + seq exactly as before.
+        self._seal_tag = "" if shard_id is None else f"{shard_id}."
+        self._seal_oid_base = SEAL_OID_BASE + (
+            0 if shard_id is None else shard_id << 24
+        )
+        # per-tile modeled billing history (admission estimator input)
+        self._pt_tiles = 0
+        self._pt_launches = 0
+
+    # -- scale-out plumbing ----------------------------------------------------
+    @property
+    def _block_bytes(self) -> int:
+        # namespace-wide (an object's geometry doesn't depend on which
+        # shard serves it), so it lives on the metadata plane
+        return self.meta.block_bytes
+
+    @_block_bytes.setter
+    def _block_bytes(self, value: int) -> None:
+        self.meta.block_bytes = value
+
+    def _fab_tenant(self, tenant):
+        """This shard's fabric lane for a workload tenant: "gold@s1"
+        under sharding, identity standalone — per-shard accounting and
+        pacing on the shared fabric without changing effective weights
+        (``NetSimulator.weight_of`` falls back to the base name)."""
+        return shard_tenant(tenant, self.shard_id)
 
     # -- availability: store OR cache, gated on repair completion --------------
     def _available(self, key: BlockKey) -> bool:
@@ -829,26 +983,24 @@ class ObjectGateway:
         # read again and any cached copy stops deserving reconstruction
         # priority. The re-price (and negative-entry purge) is deferred
         # to that simulated moment.
-        if self.cache is not None:
-            self._reprice_on_heal.add(key)
-            # the tombstone dies with the repair WRITE, not with the
-            # node-down condition that keyed it: a corrupt-then-repaired
-            # block never crashed a node, so without this purge its
-            # negative entry would outlive the repair and shadow the
-            # healthy store copy until TTL expiry (the _healing gate
-            # keeps it invisible until the write-back lands regardless)
-            self.cache.purge_negative([key])
+        self._reprice_on_heal.add(key)
+        # the tombstone dies with the repair WRITE, not with the
+        # node-down condition that keyed it: a corrupt-then-repaired
+        # block never crashed a node, so without this purge its
+        # negative entry would outlive the repair and shadow the
+        # healthy store copy until TTL expiry (the _healing gate
+        # keeps it invisible until the write-back lands regardless).
+        # Fans out to EVERY shard's cache: a heal is a cluster fact.
+        self.meta.purge_negative([key])
         # the rewrite replaces the bytes, so any still-undetected silent
         # damage is gone with them
         self._corrupted_at.pop(key, None)
 
     def _apply_heal_reprice(self, key: BlockKey) -> None:
-        if self.cache is not None:
-            self.cache.purge_negative([key])
+        self.meta.purge_negative([key])
         if key in self._reprice_on_heal:
             self._reprice_on_heal.discard(key)
-            if self.cache is not None:
-                self.cache.refresh_cost(key, 1.0)
+            self.meta.refresh_cost(key, 1.0)
 
     # -- bulk load (trace setup; not metered on the fabric) --------------------
     def load_objects(self, objects: np.ndarray) -> None:
@@ -971,6 +1123,13 @@ class ObjectGateway:
             batch.append(req)
         flush_open()
         boundary_events(None)
+        self._finalize_report(report)
+        return report
+
+    def _finalize_report(self, report: GatewayReport) -> None:
+        """Stamp end-of-serve coalescer/autotune/tracer statistics into
+        the report — shared by ``serve`` and the sharded front door's
+        merged loop (which finalizes each shard's report at drain)."""
         st = self.coalescer.stats
         report.jit_cache_entries = st.jit_entries
         report.decode_launches = st.decode_calls
@@ -990,7 +1149,6 @@ class ObjectGateway:
             for name, v in self.tracer.stats().items():
                 if isinstance(v, (int, float)):
                     m.gauge(f"traces_{name}").set(v)
-        return report
 
     # -- request batch execution ------------------------------------------------
     def _flush(self, batch: list[Request], report: GatewayReport) -> None:
@@ -1175,7 +1333,9 @@ class ObjectGateway:
                     # own reservation: the hedge deadline must measure
                     # the fabric as the request found it
                     pre_backlog = (
-                        self.sim.send_backlog(src_node, req.tenant, fetch_at)
+                        self.sim.send_backlog(
+                            src_node, self._fab_tenant(req.tenant), fetch_at
+                        )
                         if self.config.hedge and key in plan.direct
                         else None
                     )
@@ -1186,7 +1346,7 @@ class ObjectGateway:
                             client,
                             blk.nbytes,
                             fetch_at,
-                            tenant=req.tenant,
+                            tenant=self._fab_tenant(req.tenant),
                             deadline=deadline,
                             ctx=(tid, tid) if tracer.enabled else None,
                         )
@@ -1323,7 +1483,19 @@ class ObjectGateway:
                             "decode output digest mismatch for block "
                             f"({op.group_id}, {op.row}, {col})"
                         )
-        if self.config.decode_cost is not None:
+        if self.config.decode_cost_per_tile is not None:
+            # throughput-bound modeled billing: a unit costs its tile
+            # count, so splitting the op stream into more/smaller
+            # launches does not change the cluster's total billed work
+            units = [
+                replace(u, compute=self.config.decode_cost_per_tile * u.tiles)
+                for u in units
+            ]
+            # rolling tiles-per-launch average for the admission
+            # estimator (billed work, not measured wall time)
+            self._pt_tiles += sum(u.tiles for u in units)
+            self._pt_launches += len({(u.kind, u.launch_id) for u in units})
+        elif self.config.decode_cost is not None:
             # modeled-cost mode: deterministic billing — each unit gets
             # its FRACTION of one modeled launch, so a launch's units
             # still sum to exactly decode_cost regardless of dataplane
@@ -1549,8 +1721,9 @@ class ObjectGateway:
         self._lost_at.setdefault(key, at)
         # any in-flight heal write-back raced the corruption; distrust it
         self._healing.pop(key, None)
-        if self.cache is not None:
-            self.cache.put_negative(key, at, self.config.negative_ttl)
+        # tombstone in EVERY shard's negative cache — another shard may
+        # hold this block's key in a read plan it has yet to execute
+        self.meta.put_negative(key, at, self.config.negative_ttl)
         report.metrics.counter("corruption_detected", source=source).inc()
         t0 = self._corrupted_at.pop(key, None)
         if t0 is not None:
@@ -1715,7 +1888,7 @@ class ObjectGateway:
                     client,
                     sblk.nbytes,
                     h_at,
-                    tenant=tenant,
+                    tenant=self._fab_tenant(tenant),
                     deadline=deadline,
                     ctx=(tid, tid) if self.tracer.enabled else None,
                 )
@@ -1888,7 +2061,7 @@ class ObjectGateway:
             while len(self._pending_rows) >= t:
                 rows = self._pending_rows[:t]
                 del self._pending_rows[:t]
-                gid = f"w{self._seal_group_seq}"
+                gid = f"w{self._seal_tag}{self._seal_group_seq}"
                 self._seal_group_seq += 1
                 groups.append(
                     {
@@ -1907,7 +2080,7 @@ class ObjectGateway:
                     jnode,
                     nb,
                     req.time,
-                    tenant=req.tenant,
+                    tenant=self._fab_tenant(req.tenant),
                     ctx=(tid, tid) if tracer.enabled else None,
                 )
             )
@@ -2250,11 +2423,12 @@ class ObjectGateway:
             # folded value (the write re-digests it over its new bytes)
             self.store.put_block(par_key, val)
             self._corrupted_at.pop(par_key, None)
-            if self.cache is not None:
-                # only a parity block actually WRITTEN sheds its
-                # known-down tombstone; an unavailable one stays
-                # negative until repair or recovery brings it back
-                self.cache.purge_negative([par_key])
+            # fresh parity bytes: stale cached copies die EVERYWHERE, and
+            # only a parity block actually WRITTEN sheds its known-down
+            # tombstone; an unavailable one stays negative until repair
+            # or recovery brings it back
+            self.meta.invalidate(par_key)
+            self.meta.purge_negative([par_key])
         for job in jobs:
             self._commit_overwrite(job, report)
         for seal in seals:
@@ -2288,7 +2462,7 @@ class ObjectGateway:
                         self.store.node_of(par_key),
                         int(q),
                         xfer_at,
-                        tenant=req.tenant,
+                        tenant=self._fab_tenant(req.tenant),
                         ctx=(tid, tid) if tracer.enabled else None,
                     )
                 )
@@ -2304,20 +2478,22 @@ class ObjectGateway:
                     self.store.node_of(old_key),
                     int(q),
                     xfer_at,
-                    tenant=req.tenant,
+                    tenant=self._fab_tenant(req.tenant),
                     ctx=(tid, tid) if tracer.enabled else None,
                 )
             )
             inflight.append((end, float(q)))
             done = max(done, end)
             nbytes += q
-            if self.cache is not None:
-                self.cache.invalidate(old_key)
-                self.cache.invalidate(par_key)
-                # the data write re-placed its block on an alive node:
-                # that tombstone is stale (the parity one is handled at
-                # the fold commit, only when actually written)
-                self.cache.purge_negative([old_key])
+            # PUT invalidations propagate to EVERY shard's cache: a
+            # routed overwrite must not leave pre-write bytes servable
+            # from a sibling shard that cached them for a vertical read
+            self.meta.invalidate(old_key)
+            self.meta.invalidate(par_key)
+            # the data write re-placed its block on an alive node:
+            # that tombstone is stale (the parity one is handled at
+            # the fold commit, only when actually written)
+            self.meta.purge_negative([old_key])
             # a client write supersedes any in-flight repair write-back
             self._healing.pop(old_key, None)
             self._healing.pop(par_key, None)
@@ -2366,7 +2542,11 @@ class ObjectGateway:
                     f"sealed-stripe encode mismatch for group {gid}"
                 )
         self.store.put_group(gid, mat)
-        client = -(1 + zlib.crc32(gid.encode()) % self.config.num_client_ports)
+        client = -(
+            1
+            + (self.shard_id or 0) * self.config.num_client_ports
+            + zlib.crc32(gid.encode()) % self.config.num_client_ports
+        )
         xfer_at = max(seal["time"], seal["enc_done"])
         inflight = self._put_inflight.setdefault(seal["tenant"], [])
         tid = seal["tid"]
@@ -2381,7 +2561,7 @@ class ObjectGateway:
                         self.store.node_of((gid, r, c)),
                         int(q),
                         xfer_at,
-                        tenant=seal["tenant"],
+                        tenant=self._fab_tenant(seal["tenant"]),
                         ctx=(tid, tid) if tracer.enabled else None,
                     )
                 )
@@ -2390,7 +2570,7 @@ class ObjectGateway:
                 nbytes += q
         members = []
         for r, (seq, row_data, exts) in enumerate(seal["rows"]):
-            oid = SEAL_OID_BASE + seq
+            oid = self._seal_oid_base + seq
             self._objects[oid] = (gid, r)
             self._expected[oid] = row_data
             self._sealed_rows[seq] = oid
@@ -2436,7 +2616,7 @@ class ObjectGateway:
         while self._pending_rows:
             rows = self._pending_rows[:t]
             del self._pending_rows[:t]
-            gid = f"w{self._seal_group_seq}"
+            gid = f"w{self._seal_tag}{self._seal_group_seq}"
             self._seal_group_seq += 1
             groups.append(
                 {
@@ -2503,10 +2683,10 @@ class ObjectGateway:
         if isinstance(evt, NodeRecoverEvent):
             keys = self.store.keys_on_node(evt.node)
             self.store.heal_node(evt.node)
-            if self.cache is not None:
-                # transient failure over: the node's blocks are back, so
-                # their negative entries expire NOW, not at their TTL
-                self.cache.purge_negative(keys)
+            # transient failure over: the node's blocks are back, so
+            # their negative entries expire NOW, not at their TTL —
+            # in every shard's cache, not just the one applying the event
+            self.meta.purge_negative(keys)
             for key in keys:
                 if self.store.available(key):
                     t0 = self._lost_at.pop(key, None)
@@ -2524,10 +2704,7 @@ class ObjectGateway:
                 self._lost_at.setdefault(key, evt.time)
                 # data destroyed: any in-flight heal of this key is moot
                 self._healing.pop(key, None)
-                if self.cache is not None:
-                    self.cache.put_negative(
-                        key, evt.time, self.config.negative_ttl
-                    )
+                self.meta.put_negative(key, evt.time, self.config.negative_ttl)
             return bool(lost)
         # FailureEvent: transient crash — disks survive, the node may
         # recover with its blocks intact
@@ -2538,8 +2715,7 @@ class ObjectGateway:
         self.store.fail_nodes([evt.node])
         for key in keys:
             self._lost_at.setdefault(key, evt.time)
-            if self.cache is not None:
-                self.cache.put_negative(key, evt.time, self.config.negative_ttl)
+            self.meta.put_negative(key, evt.time, self.config.negative_ttl)
         return True
 
     # -- background repair -------------------------------------------------------
@@ -2584,7 +2760,7 @@ class ObjectGateway:
         tenants = tuple(slos) or (FOREGROUND_TENANT,)
         backlog = max(
             (
-                self.sim.send_backlog(node, tenant, at_time)
+                self.sim.send_backlog(node, self._fab_tenant(tenant), at_time)
                 for node in self.store.alive_nodes()
                 for tenant in tenants
             ),
@@ -2608,6 +2784,11 @@ class ObjectGateway:
         self.fixer.not_before = at_time
         pending: list[tuple[str, list[BlockKey]]] = []
         for gid in self._groups:
+            if not self.meta.owns_group(self.shard_id, gid):
+                # under sharding each group's repair runs on exactly one
+                # shard (directory-hashed), so N shards split the
+                # backlog; a dead shard's groups re-hash to survivors
+                continue
             missing = [
                 (gid, r, c)
                 for r in range(self.family.rows)
@@ -2656,7 +2837,7 @@ class ObjectGateway:
                 # repair tenant's own makespan is "how long this repair
                 # has been dragging")
                 elapsed_anchor = max(
-                    at_time, self.sim.class_makespan.get(REPAIR_TENANT, 0.0)
+                    at_time, self.sim.class_makespan.get(self._repair_tenant, 0.0)
                 )
                 oldest = min(
                     (self._lost_at.get(k, at_time) for k in missing),
@@ -2671,7 +2852,10 @@ class ObjectGateway:
                     self._pacing_slo,
                     outstanding_for=elapsed_anchor - oldest,
                 )
-                self.sim.set_tenant_weight(REPAIR_TENANT, share)
+                # fabric pacing acts on this shard's repair LANE (other
+                # shards' repairs pace independently); the engine pool
+                # is private, so the base name suffices there
+                self.sim.set_tenant_weight(self._repair_tenant, share)
                 self._pool.set_weight(REPAIR_TENANT, share)
                 report.pacing.append((round(elapsed_anchor, 6), round(share, 4)))
                 if rtid:
@@ -2690,10 +2874,18 @@ class ObjectGateway:
             # repaired blocks stay invisible to reads until the repair's
             # background transfers complete on the fabric AND its decode
             # compute clears the (shared, weighted) engine pool
-            done = self.sim.class_makespan.get(REPAIR_TENANT, at_time)
+            done = self.sim.class_makespan.get(self._repair_tenant, at_time)
             compute = rep.compute_time
             if self.config.decode_cost is not None:
                 compute = self.config.decode_cost * rep.blocks_repaired
+            elif self.config.decode_cost_per_tile is not None:
+                # throughput model: each repaired block is one decoded
+                # row of block_bytes, priced at the coalescer tile width
+                compute = (
+                    self.config.decode_cost_per_tile
+                    * rep.blocks_repaired
+                    * self.coalescer.tiles_for(self._block_bytes)
+                )
             if compute > 0.0:
                 # fetch -> decode -> write-back: the decode cannot start
                 # before the repair's fabric transfers deliver its inputs
@@ -2713,11 +2905,10 @@ class ObjectGateway:
             for key in missing:
                 if self.store.available(key):
                     self._healing[key] = done
-                    if self.cache is not None:
-                        # the block is no longer known-down; the _healing
-                        # gate (not the tombstone) hides it until its
-                        # write-back transfers land
-                        self.cache.purge_negative([key])
+                    # the block is no longer known-down; the _healing
+                    # gate (not the tombstone) hides it until its
+                    # write-back transfers land — purged cluster-wide
+                    self.meta.purge_negative([key])
                     t0 = self._lost_at.pop(key, None)
                     if t0 is not None:
                         report.mttr_samples.append(done - t0)
@@ -2900,9 +3091,18 @@ class ObjectGateway:
         """Expected scaled wall time of one batched decode launch, from
         the coalescer's measured history (0 until the first launch —
         optimistic, so cold-start traffic is admitted). Modeled-cost mode
-        returns the modeled cost exactly."""
+        returns the modeled cost exactly; per-tile mode prices the
+        rolling billed tiles-per-launch average."""
         if self.config.decode_cost is not None:
             return self.config.decode_cost
+        if self.config.decode_cost_per_tile is not None:
+            if not self._pt_launches:
+                return 0.0
+            return (
+                self.config.decode_cost_per_tile
+                * self._pt_tiles
+                / self._pt_launches
+            )
         st = self.coalescer.stats
         return st.compute_time / st.decode_calls if st.decode_calls else 0.0
 
@@ -2968,7 +3168,9 @@ class ObjectGateway:
             fetch_bytes += self._block_bytes
             net_backlog = max(
                 net_backlog,
-                self.sim.send_backlog(self.store.node_of(key), tenant, now),
+                self.sim.send_backlog(
+                    self.store.node_of(key), self._fab_tenant(tenant), now
+                ),
             )
         share = self.sim.weight_of(tenant)
         est = net_backlog + fetch_bytes / (share * self.profile.node_bandwidth)
@@ -2999,7 +3201,11 @@ class ObjectGateway:
         # because many distinct clients want it, so its traffic spreads
         # over client NICs instead of melting one artificial hot port.
         h = (req.object_id * 1_000_003 + int(req.time * 1e7)) % (2**31)
-        return -(1 + h % self.config.num_client_ports)
+        # each shard gets a private client-NIC stripe: shard 1's port -33
+        # is not shard 0's port -1, so shards don't serialize on fake
+        # shared client hardware (the whole point of scale-out)
+        base = (self.shard_id or 0) * self.config.num_client_ports
+        return -(1 + base + h % self.config.num_client_ports)
 
     def _assemble_payload(self, req, plan, fetched, decoded) -> np.ndarray:
         """The GET's (k, q) payload: direct blocks + reconstructions."""

@@ -107,6 +107,23 @@ class SlowNicEvent:
 
 
 @dataclass(frozen=True)
+class ShardFailEvent:
+    """Whole-gateway-shard death: the serving process for one namespace
+    shard dies mid-run. Storage is untouched (blocks live on the shared
+    BlockStore fabric, not in the gateway), so ZERO blocks are lost —
+    the sharded front door removes the dead shard's points from the
+    consistent-hash directory and its namespace ranges fail over to the
+    surviving shards. Consumed by ``ShardedGateway`` only; a standalone
+    ``ObjectGateway`` has no shard to kill and rejects the event.
+    ``node`` is fixed at -1 so the event can ride the same time-sorted
+    cluster-event stream as node-level faults."""
+
+    time: float
+    shard: int
+    node: int = -1
+
+
+@dataclass(frozen=True)
 class WorkloadConfig:
     num_objects: int
     num_requests: int

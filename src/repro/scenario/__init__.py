@@ -14,7 +14,10 @@
 # (silent bit-flip / torn write / erase on one node's blocks),
 # SlowNodeEvent / SlowNicEvent (fail-slow: a rate factor degrades the
 # node's effective link speed until a factor-1.0 event restores it;
-# flapping_slow expands a duty cycle into such pairs). generate_scenario draws seeded random traces
+# flapping_slow expands a duty cycle into such pairs), and
+# ShardFailEvent kills a whole serving shard mid-run (storage survives;
+# the ShardedGateway front door fails the namespace range over to the
+# survivors). generate_scenario draws seeded random traces
 # from a ScenarioConfig with a hard admission bound: with anti-colocated
 # placement, f concurrently-affected nodes cost any stripe at most f
 # blocks, so traces bounded at f <= n - k never exceed the code's

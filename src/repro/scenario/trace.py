@@ -43,6 +43,7 @@ from repro.gateway.workload import (
     FailureEvent,
     NodeRecoverEvent,
     Request,
+    ShardFailEvent,
     SlowNicEvent,
     SlowNodeEvent,
     WorkloadConfig,
@@ -56,6 +57,7 @@ ClusterEvent = (
     | CorruptionEvent
     | SlowNodeEvent
     | SlowNicEvent
+    | ShardFailEvent
 )
 
 _EVENT_TYPES = {
@@ -65,6 +67,7 @@ _EVENT_TYPES = {
     "corrupt": CorruptionEvent,
     "slow_node": SlowNodeEvent,
     "slow_nic": SlowNicEvent,
+    "shard_fail": ShardFailEvent,
 }
 _EVENT_NAMES = {v: k for k, v in _EVENT_TYPES.items()}
 
@@ -79,6 +82,8 @@ def _event_to_jsonable(e: ClusterEvent) -> dict:
         d["rate_factor"] = e.rate_factor
         if isinstance(e, SlowNicEvent):
             d["direction"] = e.direction
+    elif isinstance(e, ShardFailEvent):
+        d["shard"] = e.shard
     return d
 
 
@@ -105,6 +110,8 @@ def _event_from_jsonable(d: dict) -> ClusterEvent:
             rate_factor=float(d.get("rate_factor", 0.1)),
             direction=str(d.get("direction", "send")),
         )
+    if kind == "shard_fail":
+        return ShardFailEvent(time=t, shard=int(d["shard"]))
     return _EVENT_TYPES[kind](time=t, node=node)
 
 
@@ -187,8 +194,10 @@ class ScenarioTrace:
             self.events, key=lambda e: (e.time, isinstance(e, NodeRecoverEvent))
         )
         for evt in ordered:
-            if isinstance(evt, (SlowNodeEvent, SlowNicEvent)):
-                continue  # data intact: slowness never consumes tolerance
+            if isinstance(evt, (SlowNodeEvent, SlowNicEvent, ShardFailEvent)):
+                # slowness / serving-shard death: data intact on the
+                # storage fabric, erasure tolerance untouched
+                continue
             if isinstance(evt, NodeRecoverEvent):
                 if evt.node not in lost:
                     affected.discard(evt.node)

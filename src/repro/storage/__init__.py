@@ -7,6 +7,8 @@ from repro.storage.netmodel import (
     ClusterProfile,
     NetSimulator,
     Transfer,
+    base_tenant,
+    shard_tenant,
 )
 from repro.storage.repair import BlockFixer, RepairReport, UnrecoverableError
 
@@ -21,6 +23,8 @@ __all__ = [
     "ClusterProfile",
     "NetSimulator",
     "Transfer",
+    "base_tenant",
+    "shard_tenant",
     "BlockFixer",
     "RepairReport",
     "UnrecoverableError",

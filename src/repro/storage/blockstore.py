@@ -6,6 +6,14 @@ HDFS-RAID's RaidNode policy: all blocks of a group land on distinct
 nodes, so a node failure costs each group at most one block — the failure
 model under which the paper's per-column/-row analysis holds.
 
+Rack awareness (XORing Elephants, 1301.3791): when ``nodes_per_rack``
+is set, nodes are partitioned into failure domains of that size and
+placement lifts the anti-colocation invariant from nodes to racks — no
+two blocks of the same row OR column share a rack, so a whole-rack
+failure (ToR switch, PDU) still costs each stripe and each vertical
+group at most one block. With ``nodes_per_rack=None`` every node is its
+own rack and the classic layout is byte-identical to before.
+
 Data lives in host numpy (this is the "disk"); codec math runs in JAX.
 
 Integrity plane: every stored block carries a crc32 digest computed at
@@ -36,11 +44,20 @@ class PlacementError(RuntimeError):
 @dataclass
 class BlockStore:
     num_nodes: int
+    nodes_per_rack: int | None = None
     blocks: dict[BlockKey, np.ndarray] = field(default_factory=dict)
     placement: dict[BlockKey, int] = field(default_factory=dict)
     failed_nodes: set[int] = field(default_factory=set)
     checksums: dict[BlockKey, int] = field(default_factory=dict)
     _group_counter: int = 0
+
+    # -- failure domains -------------------------------------------------------
+    def rack_of(self, node: int) -> int:
+        """Failure-domain id of ``node``. With no rack map configured,
+        every node is its own rack (node-level anti-colocation only)."""
+        if self.nodes_per_rack is None:
+            return int(node)
+        return int(node) // self.nodes_per_rack
 
     # -- integrity -------------------------------------------------------------
     @staticmethod
@@ -62,8 +79,12 @@ class BlockStore:
         alive = [n for n in range(self.num_nodes) if n not in self.failed_nodes]
         # crc32, not hash(): placement must be stable across processes
         # (PYTHONHASHSEED randomizes str hashes per run)
-        offset = (zlib.crc32(group_id.encode()) ^ self._group_counter) % len(alive)
+        salt = zlib.crc32(group_id.encode()) ^ self._group_counter
+        offset = salt % len(alive)
         self._group_counter += 1
+        if self.nodes_per_rack is not None:
+            self._place_group_rack_aware(group_id, rows, cols, alive, salt)
+            return
         if need <= len(alive):
             chosen = [alive[(offset + i) % len(alive)] for i in range(need)]
             i = 0
@@ -87,6 +108,54 @@ class BlockStore:
         for r in range(rows):
             for c in range(cols):
                 self.placement[(group_id, r, c)] = alive[(offset + c + k_step * r) % n]
+
+    def _place_group_rack_aware(
+        self, group_id: str, rows: int, cols: int, alive: list[int], salt: int
+    ) -> None:
+        """Latin-square layout over RACKS instead of nodes: rack(r, c) =
+        racks[(off + c + step*r) mod R]. With R >= cols the racks within
+        a row are all distinct, and an anti-colocating stride keeps the
+        racks within a column distinct — one whole-rack failure costs
+        each stripe and each vertical group at most one block. Within a
+        rack, a per-group rotation spreads blocks over the rack's alive
+        nodes (distinct nodes whenever capacity allows)."""
+        racks: dict[int, list[int]] = {}
+        for n in alive:
+            racks.setdefault(self.rack_of(n), []).append(n)
+        rack_ids = sorted(racks)
+        n_racks = len(rack_ids)
+        if n_racks < cols:
+            raise PlacementError(
+                f"group {group_id}: rack-aware placement needs >= {cols} racks "
+                f"with alive nodes (one rack per stripe block), {n_racks} available"
+            )
+        step = next(
+            (s for s in range(1, n_racks) if all((s * d) % n_racks for d in range(1, rows))),
+            None,
+        )
+        if step is None:
+            raise PlacementError(
+                f"no anti-colocating rack stride for {rows}x{cols} over {n_racks} racks"
+            )
+        off = salt % n_racks
+        used: set[int] = set()
+        spin: dict[int, int] = {}
+        for r in range(rows):
+            for c in range(cols):
+                rid = rack_ids[(off + c + step * r) % n_racks]
+                members = racks[rid]
+                start = (salt + spin.get(rid, 0)) % len(members)
+                spin[rid] = spin.get(rid, 0) + 1
+                node = next(
+                    (
+                        members[(start + i) % len(members)]
+                        for i in range(len(members))
+                        if members[(start + i) % len(members)] not in used
+                    ),
+                    members[start],
+                )
+                used.add(node)
+                self.placement[(group_id, r, c)] = node
 
     # -- block API ------------------------------------------------------------
     def put_group(self, group_id: str, matrix: np.ndarray) -> None:
@@ -113,6 +182,21 @@ class BlockStore:
             }
             free = [n for n in alive if n not in used]
             if free:
+                if self.nodes_per_rack is not None:
+                    # keep the rack invariant on repair write-back: avoid
+                    # racks already hosting a live block of this row/col
+                    gid, row, col = key
+                    bad_racks = {
+                        self.rack_of(self.placement[k])
+                        for k in self.placement
+                        if k[0] == gid
+                        and k != key
+                        and (k[1] == row or k[2] == col)
+                        and self.available(k)
+                    }
+                    rack_ok = [n for n in free if self.rack_of(n) not in bad_racks]
+                    if rack_ok:
+                        free = rack_ok
                 self.placement[key] = free[0]
             else:
                 # dense cluster: every alive node already hosts a group
@@ -130,7 +214,14 @@ class BlockStore:
                     and (k[1] == row or k[2] == col)
                     and self.available(k)
                 }
-                cands = [n for n in alive if n not in conflict]
+                if self.nodes_per_rack is not None:
+                    # rack-level anti-colocation first, node-level fallback
+                    bad_racks = {self.rack_of(n) for n in conflict}
+                    cands = [n for n in alive if self.rack_of(n) not in bad_racks]
+                    if not cands:
+                        cands = [n for n in alive if n not in conflict]
+                else:
+                    cands = [n for n in alive if n not in conflict]
                 if not cands:
                     cands = alive
                 # crc32-keyed pick (process-stable, like _place_group):

@@ -95,6 +95,28 @@ FOREGROUND_TENANT = "foreground"
 REPAIR_TENANT = "repair"
 
 
+def shard_tenant(tenant, shard_id: int | None):
+    """Shard-qualified fabric tenant id: ``"gold" -> "gold@s2"``. The
+    sharded gateway tags every fabric submission with its shard so
+    per-tenant accounting (class_bytes / class_makespan / deadline
+    misses) and mid-run re-weighting (the repair pacer) get a private
+    lane per shard. Identity for ``shard_id=None`` or non-str tenants
+    (legacy int class ids keep their two-class semantics)."""
+    if shard_id is None or not isinstance(tenant, str):
+        return tenant
+    return f"{tenant}@s{shard_id}"
+
+
+def base_tenant(tenant):
+    """Strip a shard qualifier: ``"gold@s2" -> "gold"``. Identity for
+    unqualified ids."""
+    if isinstance(tenant, str):
+        head, sep, tail = tenant.rpartition("@s")
+        if sep and tail.isdigit():
+            return head
+    return tenant
+
+
 @dataclass
 class Transfer:
     src_node: int
@@ -334,6 +356,15 @@ class NetSimulator:
         w = self._weights.get(tenant)
         if w is not None:
             return w
+        # shard-qualified tenants ("gold@s2") inherit the base tenant's
+        # weight unless the shard lane was re-weighted explicitly — a
+        # shard tag changes accounting, not policy
+        base = base_tenant(tenant)
+        if base is not tenant:
+            w = self._weights.get(base)
+            if w is not None:
+                return w
+            tenant = base
         if isinstance(tenant, int):
             return self.background_share
         return 1.0

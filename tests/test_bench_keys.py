@@ -17,7 +17,11 @@ p99 / storage overhead under the shared Weibull fault trace plus the
 CORE-vs-RS repair ratio and clean-path byte identity), and the PR 9
 write-dataplane block (gateway_writes: ragged-vs-sync PUT throughput
 under modeled encode billing, jit signatures per encode kind, stripe
-sealing, and the churn-audit consistency counters), and skips cleanly
+sealing, and the churn-audit consistency counters), the PR 10 sharded
+scale-out block (gateway_shards: multi-shard speedup over one shared
+store/fabric, the shard-death failover trace, routing identity) plus
+the double-failure blend subkeys under gateway_bakeoff, and skips
+cleanly
 when the snapshot has not been generated in this checkout (e.g. a
 fresh clone running only the unit suite).
 """
@@ -51,6 +55,7 @@ TOP_LEVEL_KEYS = {
     "gateway_integrity",
     "gateway_bakeoff",
     "gateway_writes",
+    "gateway_shards",
 }
 
 PIPELINE_KEYS = {
@@ -151,9 +156,45 @@ BAKEOFF_KEYS = {
     "core_vs_rs_repair_time_ratio",
     "clean_path_identical",
     "blocks_lost",
+    "double_failure",
 }
 
 FAMILY_NAMES = {"core", "rs", "lrc"}
+
+# PR-10 double-failure blend subkeys (gateway_bakeoff.double_failure):
+# 85% single / 15% same-column double erasures, CORE-vs-RS blended
+# degraded traffic between the t/k and 1.0 endpoints.
+DOUBLE_FAILURE_KEYS = {
+    "double_fraction",
+    "degraded_gets",
+    "recon_blocks_per_degraded_get",
+    "core_vs_rs_degraded_ratio",
+    "vertical_endpoint_ratio",
+}
+
+# PR-10 sharded scale-out block: near-linear multi-shard speedup over
+# one shared store/fabric, the shard-death failover trace, and the
+# routing-identity bit.
+SHARDS_KEYS = {
+    "shard_counts",
+    "throughput_rps",
+    "speedup",
+    "p99_ms",
+    "shard_death",
+    "routing",
+}
+
+SHARD_DEATH_KEYS = {
+    "shards",
+    "dead_shards",
+    "requests",
+    "completed",
+    "p99_pre_ms",
+    "p99_post_ms",
+    "p99_failover_ratio",
+    "blocks_lost",
+    "unreadable_objects",
+}
 
 # PR-9 write-dataplane block: ragged ENCODE megakernel vs the per-PUT
 # sync baseline plus the churn consistency audit.
@@ -349,6 +390,56 @@ def test_gateway_bakeoff_values_sane(bench):
     ovh = bak["storage_overhead"]
     assert ovh["core"] > ovh["rs"] == ovh["lrc"]
     assert all(v > 0 for v in bak["degraded_p99_ms"].values())
+
+
+def test_gateway_double_failure_keys(bench):
+    df = bench["gateway_bakeoff"]["double_failure"]
+    missing = DOUBLE_FAILURE_KEYS - set(df)
+    assert not missing, f"double_failure lost stable keys: {sorted(missing)}"
+    for section in ("degraded_gets", "recon_blocks_per_degraded_get"):
+        assert {"core", "rs"} <= set(df[section]), section
+
+
+def test_gateway_double_failure_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): the blended CORE-vs-RS degraded
+    traffic ratio under 85% single / 15% same-column double erasures
+    sits strictly between the vertical endpoint (t/k) and the
+    all-horizontal 1.0 — the paper's double-failure regime."""
+    df = bench["gateway_bakeoff"]["double_failure"]
+    assert 0.0 < df["double_fraction"] < 0.5
+    assert df["vertical_endpoint_ratio"] < df["core_vs_rs_degraded_ratio"] < 1.0
+    assert df["degraded_gets"]["core"] > 0
+    assert df["degraded_gets"]["core"] == df["degraded_gets"]["rs"]
+
+
+def test_gateway_shards_keys(bench):
+    sh = bench["gateway_shards"]
+    missing = SHARDS_KEYS - set(sh)
+    assert not missing, f"gateway_shards lost stable keys: {sorted(missing)}"
+    for section in ("throughput_rps", "speedup", "p99_ms"):
+        assert {"s1", "s2", "s4", "s8"} <= set(sh[section]), section
+    assert SHARD_DEATH_KEYS <= set(sh["shard_death"])
+    assert {"digests_compared", "digest_match"} <= set(sh["routing"])
+
+
+def test_gateway_shards_values_sane(bench):
+    """Light sanity (the real acceptance gates live in
+    benchmarks/gateway_load.py check()): near-linear scale-out (>= 3x at
+    4 shards), zero-loss whole-shard-death failover with bounded
+    survivor p99, and routing identity between 1 and 4 shards."""
+    sh = bench["gateway_shards"]
+    sp = sh["speedup"]
+    assert sp["s1"] == 1.0
+    assert 1.0 < sp["s2"] < sp["s4"] < sp["s8"]
+    assert sp["s4"] >= 3.0
+    dth = sh["shard_death"]
+    assert dth["blocks_lost"] == 0
+    assert dth["unreadable_objects"] == 0
+    assert dth["completed"] == dth["requests"]
+    assert 0 < dth["p99_failover_ratio"] <= 1.5
+    rt = sh["routing"]
+    assert rt["digest_match"] is True and rt["digests_compared"] > 0
 
 
 def test_gateway_writes_keys(bench):

@@ -171,3 +171,96 @@ def test_partial_recovery_across_clusters():
     report = fixer.fix_group("g0")
     assert not report.recovered  # overall group not fully recovered
     np.testing.assert_array_equal(store.blocks[("g0", 3, 8)], matrix[3, 8])
+
+
+# -- rack-aware placement (failure domains) -----------------------------------
+
+
+def test_rack_aware_placement_row_and_col_distinct():
+    """With nodes_per_rack set, no two blocks of the same row OR column
+    share a rack — a whole-rack failure (ToR/PDU) costs each stripe and
+    each vertical repair group at most one block."""
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=36, nodes_per_rack=3)  # 12 racks >= n=9
+    for g in range(6):
+        make_group(code, store, group_id=f"g{g}", seed=g)
+    for g in range(6):
+        racks = {
+            (r, c): store.rack_of(store.node_of((f"g{g}", r, c)))
+            for r in range(code.rows)
+            for c in range(code.n)
+        }
+        for r in range(code.rows):
+            assert len({racks[(r, c)] for c in range(code.n)}) == code.n
+        for c in range(code.n):
+            assert len({racks[(r, c)] for r in range(code.rows)}) == code.rows
+
+
+def test_whole_rack_failure_costs_one_block_per_line():
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=36, nodes_per_rack=3)
+    for g in range(4):
+        make_group(code, store, group_id=f"g{g}", seed=10 + g)
+    for rack in range(12):
+        lo = rack * 3
+        store.fail_nodes([lo, lo + 1, lo + 2])
+        for g in range(4):
+            fm = store.failure_matrix(f"g{g}", code.rows, code.n)
+            assert fm.sum(axis=1).max() <= 1  # <= 1 loss per row
+            assert fm.sum(axis=0).max() <= 1  # <= 1 loss per column
+        store.heal_node(lo), store.heal_node(lo + 1), store.heal_node(lo + 2)
+
+
+def test_rack_aware_repair_writeback_keeps_invariant():
+    """Repair write-back must re-place the healed block without putting
+    it in a rack already hosting a live block of its row or column."""
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=36, nodes_per_rack=3)
+    _, matrix = make_group(code, store, seed=3)
+    key = ("g0", 1, 4)
+    store.fail_nodes([store.node_of(key)])
+    fixer = BlockFixer(store, code, ClusterProfile.network_critical(), mode="core")
+    assert fixer.fix_group("g0").recovered
+    np.testing.assert_array_equal(store.blocks[key], matrix[1, 4])
+    new_rack = store.rack_of(store.node_of(key))
+    peer_racks = {
+        store.rack_of(store.node_of(("g0", r, c)))
+        for r in range(code.rows)
+        for c in range(code.n)
+        if (r, c) != (1, 4) and (r == 1 or c == 4)
+        and store.available(("g0", r, c))
+    }
+    assert new_rack not in peer_racks
+
+
+def test_rack_aware_placement_needs_enough_racks():
+    from repro.storage.blockstore import PlacementError
+
+    code = CoreCode(9, 6, 3)
+    store = BlockStore(num_nodes=12, nodes_per_rack=3)  # 4 racks < n=9
+    with pytest.raises(PlacementError):
+        make_group(code, store)
+
+
+def test_rackless_store_placement_unchanged():
+    """nodes_per_rack=None must keep the classic layout byte-identical
+    (the rack plane is strictly opt-in)."""
+    code = CoreCode(9, 6, 3)
+    a, b = BlockStore(num_nodes=40), BlockStore(num_nodes=40, nodes_per_rack=None)
+    make_group(code, a, seed=5)
+    make_group(code, b, seed=5)
+    assert a.placement == b.placement
+
+
+def test_gateway_wires_rack_aware_placement():
+    from repro.gateway import GatewayConfig, ObjectGateway, WorkloadConfig, generate_requests
+
+    code = CoreCode(9, 6, 3)
+    cfg = GatewayConfig(batch_window=0.01, nodes_per_rack=3)
+    gw = ObjectGateway(code, ClusterProfile.network_critical(), 36, cfg)
+    rng = np.random.default_rng(9)
+    gw.load_objects(rng.integers(0, 256, (6, code.k, 1024), dtype=np.uint8))
+    assert gw.store.nodes_per_rack == 3
+    wl = WorkloadConfig(num_objects=6, num_requests=40, arrival_rate=500.0, seed=9)
+    rep = gw.serve(generate_requests(wl), [])
+    assert len(rep.completed) == 40
